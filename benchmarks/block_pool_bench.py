@@ -1,0 +1,132 @@
+"""Block-pool reclamation benchmark (the framework-side §2.3 adaptation):
+alloc/retire throughput of the EpochPOP pool vs a per-block-refcount pool
+(the 'eager' design POP replaces), with and without a stalled engine."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from pathlib import Path
+
+from repro.runtime.block_pool import BlockPool, OutOfBlocks
+
+
+class RefcountPool:
+    """The eager baseline: every allocate/release touches a shared refcount
+    table under the lock (the analogue of fence-per-READ)."""
+
+    def __init__(self, num_blocks: int):
+        self._lock = threading.Lock()
+        self._free = list(range(num_blocks))
+        self._rc = [0] * num_blocks
+        self.freed = 0
+
+    def allocate(self, n):
+        with self._lock:
+            if len(self._free) < n:
+                raise OutOfBlocks()
+            out = [self._free.pop() for _ in range(n)]
+            for b in out:
+                self._rc[b] = 1
+            return out
+
+    def retire(self, blocks):
+        with self._lock:
+            for b in blocks:
+                self._rc[b] -= 1
+                if self._rc[b] == 0:
+                    self._free.append(b)
+                    self.freed += 1
+
+    # refcount "read" on every step touch (what POP elides)
+    def touch(self, blocks):
+        with self._lock:
+            for b in blocks:
+                self._rc[b] += 1
+            for b in blocks:
+                self._rc[b] -= 1
+
+
+def bench_pop(duration=1.0, stalled=False):
+    pool = BlockPool(4096, n_engines=2, reclaim_threshold=64)
+    stop = threading.Event()
+    ops = [0]
+
+    def engine():
+        live = []
+        while not stop.is_set():
+            pool.start_step(0)
+            b = pool.allocate(0, 4)
+            live.append(b)
+            if len(live) > 8:
+                pool.retire(0, live.pop(0))
+            pool.end_step(0)
+            ops[0] += 1
+
+    def stalled_engine():
+        pool.start_step(1)
+        pool.allocate(1, 4)
+        while not stop.is_set():
+            pool.safepoint(1)
+            time.sleep(0.0005)
+
+    ts = [threading.Thread(target=engine)]
+    if stalled:
+        ts.append(threading.Thread(target=stalled_engine))
+    for t in ts:
+        t.start()
+    time.sleep(duration)
+    stop.set()
+    for t in ts:
+        t.join()
+    return {"name": f"EpochPOP pool{' +stall' if stalled else ''}",
+            "steps_per_s": ops[0] / duration,
+            "freed": pool.stats.freed, "pings": pool.stats.pings,
+            "epoch_reclaims": pool.stats.epoch_reclaims,
+            "pop_reclaims": pool.stats.pop_reclaims}
+
+
+def bench_refcount(duration=1.0):
+    pool = RefcountPool(4096)
+    stop = threading.Event()
+    ops = [0]
+
+    def engine():
+        live = []
+        while not stop.is_set():
+            b = pool.allocate(4)
+            live.append(b)
+            for blocks in live:          # eager per-step refcount touches
+                pool.touch(blocks)
+            if len(live) > 8:
+                pool.retire(live.pop(0))
+            ops[0] += 1
+
+    t = threading.Thread(target=engine)
+    t.start()
+    time.sleep(duration)
+    stop.set()
+    t.join()
+    return {"name": "refcount pool (eager baseline)",
+            "steps_per_s": ops[0] / duration, "freed": pool.freed}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--duration", type=float, default=1.0)
+    ap.add_argument("--out", default="results/block_pool_bench.json")
+    args = ap.parse_args()
+    rows = [bench_refcount(args.duration), bench_pop(args.duration),
+            bench_pop(args.duration, stalled=True)]
+    for r in rows:
+        print(f"{r['name']:32s} {r['steps_per_s']:12.0f} steps/s "
+              f"{json.dumps({k: v for k, v in r.items() if k not in ('name', 'steps_per_s')})}")
+    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.out).write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Paper Figure 4: long-running reads.  Half the threads run searches over a
+larger list while the other half hammer updates near the head with a SMALL
+retire threshold (frequent reclamation).  NBR+ neutralizes readers into
+restarts and read throughput collapses; POP publishes instead of restarting
+and keeps read throughput near NR."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+from pathlib import Path
+
+from repro.core.sim.engine import Costs, Engine, Neutralized
+from repro.core.smr.registry import make_scheme
+from repro.core.structures.harris_michael import HarrisMichaelList
+
+SCHEMES = ["NR", "HP", "HPAsym", "HE", "EBR", "NBR+",
+           "HazardPtrPOP", "HazardEraPOP", "EpochPOP"]
+
+
+def run_one(scheme_name: str, *, n_readers=4, n_writers=4, list_size=4096,
+            reclaim_freq=4, duration=1_200_000.0, seed=11):
+    n = n_readers + n_writers
+    eng = Engine(n, costs=Costs(), seed=seed)
+    smr = make_scheme(scheme_name, eng, max_hp=4, reclaim_freq=reclaim_freq,
+                      epoch_freq=8)
+    eng.set_signal_handler(smr.handler)
+    lst = HarrisMichaelList(eng, smr)
+    key_range = list_size * 2
+
+    def prefill(t):
+        smr.thread_init(t)
+        keys = list(range(key_range))
+        random.Random(seed).shuffle(keys)
+        for k in keys[:list_size]:
+            yield from smr.start_op(t)
+            yield from lst.insert(t, k)
+            yield from smr.end_op(t)
+
+    eng.spawn(0, prefill)
+    eng.run()
+    for t in eng.threads:
+        t.clock, t.done, t.frames = 0.0, False, []
+
+    def reader(t):
+        """Long-running searches: full traversals to high keys."""
+        smr.thread_init(t)
+        rng = random.Random(seed ^ (100 + t.tid))
+        ops = 0
+        while t.clock < duration:
+            key = key_range - 1 - rng.randrange(8)   # near the tail: long read
+            while True:
+                yield from smr.start_op(t)
+                try:
+                    yield from lst.contains(t, key)
+                except Neutralized:
+                    pa = t.local.get("pending_alloc")
+                    if pa:
+                        t.local["pending_alloc"] = None
+                        yield from t.free(pa)
+                    continue
+                break
+            while True:
+                try:
+                    yield from smr.end_op(t)
+                except Neutralized:
+                    continue
+                break
+            ops += 1
+        t.stats.ops = ops
+
+    def writer(t):
+        """Updates near the head: constant retirement pressure."""
+        smr.thread_init(t)
+        rng = random.Random(seed ^ (200 + t.tid))
+        ops = 0
+        while t.clock < duration:
+            key = rng.randrange(16)                 # head-local churn
+            while True:
+                yield from smr.start_op(t)
+                try:
+                    if rng.random() < 0.5:
+                        yield from lst.insert(t, key)
+                    else:
+                        yield from lst.delete(t, key)
+                except Neutralized:
+                    pa = t.local.get("pending_alloc")
+                    if pa:
+                        t.local["pending_alloc"] = None
+                        yield from t.free(pa)
+                    continue
+                break
+            while True:
+                try:
+                    yield from smr.end_op(t)
+                except Neutralized:
+                    continue
+                break
+            ops += 1
+        t.stats.ops = ops
+
+    for tid in range(n_readers):
+        eng.spawn(tid, reader)
+    for tid in range(n_readers, n):
+        eng.spawn(tid, writer)
+    eng.run()
+    read_ops = sum(eng.threads[i].stats.ops for i in range(n_readers))
+    restarts = sum(t.stats.restarts for t in eng.threads)
+    return {
+        "scheme": scheme_name,
+        "read_throughput": read_ops / (duration / 1e6),
+        "restarts": restarts,
+        "garbage_peak": smr.garbage_peak,
+        "freed": smr.frees,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="results/long_reads.json")
+    args = ap.parse_args()
+    kw = dict(duration=800_000.0, list_size=2048) if args.quick else {}
+    results = [run_one(s, **kw) for s in SCHEMES]
+    nr = next(r for r in results if r["scheme"] == "NR")
+    for r in results:
+        r["ratio_vs_NR"] = r["read_throughput"] / max(nr["read_throughput"], 1e-9)
+        print(f"{r['scheme']:14s} read_thr={r['read_throughput']:9.1f} "
+              f"ratio={r['ratio_vs_NR']:.2f} restarts={r['restarts']:5d} "
+              f"gpeak={r['garbage_peak']}")
+    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.out).write_text(json.dumps(results, indent=1))
+
+
+if __name__ == "__main__":
+    main()

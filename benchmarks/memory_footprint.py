@@ -1,0 +1,96 @@
+"""Paper Figures 5-9 (center/right): garbage bound / robustness under a
+stalled thread.  EBR's unreclaimed garbage grows with runtime; HP/POP stay
+at the N*H bound; EpochPOP switches to pings and stays bounded."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+from pathlib import Path
+
+from repro.core.sim.engine import Costs, Engine
+from repro.core.smr.registry import make_scheme
+from repro.core.structures.harris_michael import HarrisMichaelList
+
+SCHEMES = ["EBR", "IBR", "HE", "HP", "HPAsym",
+           "HazardPtrPOP", "HazardEraPOP", "EpochPOP"]
+
+
+def run_one(scheme_name, *, stalled=True, nthreads=6, duration=400_000.0,
+            key_range=64, reclaim_freq=16, seed=13):
+    eng = Engine(nthreads, costs=Costs(), seed=seed)
+    smr = make_scheme(scheme_name, eng, max_hp=4, reclaim_freq=reclaim_freq,
+                      epoch_freq=4)
+    eng.set_signal_handler(smr.handler)
+    lst = HarrisMichaelList(eng, smr)
+
+    def prefill(t):
+        smr.thread_init(t)
+        for k in range(0, key_range, 2):
+            yield from smr.start_op(t)
+            yield from lst.insert(t, k)
+            yield from smr.end_op(t)
+
+    eng.spawn(0, prefill)
+    eng.run()
+    for t in eng.threads:
+        t.clock, t.done, t.frames = 0.0, False, []
+
+    def stalled_reader(t):
+        smr.thread_init(t)
+        yield from smr.start_op(t)
+        yield from smr.read(t, 0, lst.head)
+        while t.clock < duration:
+            yield from t.work(200)     # delayed but schedulable (Assumption 1)
+
+    def churn(t):
+        smr.thread_init(t)
+        rng = random.Random(seed ^ t.tid)
+        while t.clock < duration:
+            k = rng.randrange(key_range)
+            yield from smr.start_op(t)
+            if rng.random() < 0.5:
+                yield from lst.insert(t, k)
+            else:
+                yield from lst.delete(t, k)
+            yield from smr.end_op(t)
+
+    start = 0
+    if stalled:
+        eng.spawn(0, stalled_reader)
+        start = 1
+    for tid in range(start, nthreads):
+        eng.spawn(tid, churn)
+    eng.run()
+    retired = sum(t.stats.retired for t in eng.threads)
+    return {
+        "scheme": scheme_name, "stalled": stalled, "retired": retired,
+        "garbage_peak": smr.garbage_peak, "garbage_final": smr.garbage,
+        "freed": smr.frees,
+        "unreclaimed_frac": smr.garbage / max(retired, 1),
+        "pop_reclaims": getattr(smr, "pop_reclaims", None),
+        "epoch_reclaims": getattr(smr, "epoch_reclaims", None),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="results/memory_footprint.json")
+    args = ap.parse_args()
+    kw = dict(duration=200_000.0) if args.quick else {}
+    results = []
+    for stalled in (False, True):
+        for s in SCHEMES:
+            r = run_one(s, stalled=stalled, **kw)
+            results.append(r)
+            print(f"stall={str(stalled):5s} {s:14s} retired={r['retired']:6d} "
+                  f"final={r['garbage_final']:6d} "
+                  f"unreclaimed={r['unreclaimed_frac']:.3f}")
+    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.out).write_text(json.dumps(results, indent=1))
+
+
+if __name__ == "__main__":
+    main()

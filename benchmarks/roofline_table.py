@@ -1,0 +1,72 @@
+"""§Roofline table generator: reads results/dryrun/*.json into the
+EXPERIMENTS.md table (single-pod baselines + multi-pod check column)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def load(dirpath="results/dryrun_final"):
+    rows = {}
+    for f in sorted(Path(dirpath).glob("*.json")):
+        d = json.loads(f.read_text())
+        key = (d.get("arch", f.stem.rsplit("_", 2)[0]),
+               d.get("shape", ""), bool(d.get("multi_pod")))
+        rows[key] = d
+    return rows
+
+
+def markdown(dirpath="results/dryrun_final"):
+    rows = load(dirpath)
+    archs = sorted({k[0] for k in rows})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    lines = [
+        "| arch | shape | GiB/dev | compute_s | memory_s | collective_s |"
+        " bottleneck | useful | mp ok |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in archs:
+        for s in shapes:
+            d = rows.get((a, s, False))
+            mp = rows.get((a, s, True))
+            if d is None:
+                continue
+            if d.get("status") == "skipped":
+                lines.append(f"| {a} | {s} | — | — | — | — | SKIP | — | — |")
+                continue
+            if d.get("status") != "ok":
+                lines.append(f"| {a} | {s} | ERROR: {d.get('error','?')[:40]} |")
+                continue
+            r = d["roofline"]
+            mp_ok = "✓" if (mp and mp.get("status") == "ok") else (
+                "skip" if mp and mp.get("status") == "skipped" else "?")
+            lines.append(
+                f"| {a} | {s} | {d['memory']['per_device_total_gib']:.1f} "
+                f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                f"| {r['collective_s']:.3f} | {r['bottleneck']} "
+                f"| {r['useful_flops_fraction']:.2f} | {mp_ok} |")
+    return "\n".join(lines)
+
+
+def csv(dirpath="results/dryrun_final"):
+    rows = load(dirpath)
+    out = ["name,us_per_call,derived"]
+    for (a, s, mp), d in sorted(rows.items()):
+        if d.get("status") != "ok":
+            continue
+        r = d["roofline"]
+        out.append(f"dryrun:{a}:{s}:{'mp' if mp else 'sp'},"
+                   f"{r['step_time_lower_bound_s']*1e6:.0f},"
+                   f"bottleneck={r['bottleneck']};useful="
+                   f"{r['useful_flops_fraction']:.2f}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun_final")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    print(csv(args.dir) if args.csv else markdown(args.dir))

@@ -1,0 +1,92 @@
+"""Benchmark entrypoint: one function per paper table/figure + the framework
+benches.  Prints ``name,us_per_call,derived`` CSV (plus human-readable logs
+as '#'-prefixed lines)."""
+
+from __future__ import annotations
+
+import contextlib
+import io
+import json
+import sys
+from pathlib import Path
+
+
+def _quiet(fn, *a, **kw):
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        out = fn(*a, **kw)
+    for line in buf.getvalue().splitlines():
+        print("#", line)
+    return out
+
+
+def main() -> None:
+    csv = ["name,us_per_call,derived"]
+
+    # -- paper Fig. 1-3: SMR throughput (scaled-down quick grid) --
+    from benchmarks.smr_throughput import run as smr_run, summarize
+    res = _quiet(smr_run, structures=("HML", "HMHT"), threads=(2, 4, 8),
+                 duration=200_000.0, out="results/smr_throughput.json")
+    summ = summarize(res)
+    for r in res:
+        # us per op at the simulated 1GHz clock
+        us = 1e6 / max(r["throughput"], 1e-9) / 1e3
+        csv.append(f"smr:{r['structure']}:{r['workload']}:t{r['threads']}:"
+                   f"{r['scheme']},{us:.2f},thr={r['throughput']:.0f};"
+                   f"gpeak={r['garbage_peak']}")
+    for k, v in summ.items():
+        csv.append(f"smr_ratio:{k},0,min={v['min']:.2f};max={v['max']:.2f};"
+                   f"mean={v['mean']:.2f}")
+
+    # -- paper Fig. 4: long-running reads --
+    from benchmarks.long_reads import SCHEMES, run_one
+    lr = [_quiet(run_one, s, duration=800_000.0, list_size=2048)
+          for s in SCHEMES]
+    nr = next(r for r in lr if r["scheme"] == "NR")
+    for r in lr:
+        ratio = r["read_throughput"] / max(nr["read_throughput"], 1e-9)
+        csv.append(f"long_reads:{r['scheme']},"
+                   f"{1e6/max(r['read_throughput'],1e-9)/1e3:.2f},"
+                   f"ratio_vs_NR={ratio:.2f};restarts={r['restarts']}")
+    Path("results").mkdir(exist_ok=True)
+    Path("results/long_reads.json").write_text(json.dumps(lr, indent=1))
+
+    # -- paper Fig. 5-9: garbage bound under stall --
+    from benchmarks.memory_footprint import SCHEMES as MSCHEMES, run_one as mem_one
+    mem = []
+    for stalled in (False, True):
+        for s in MSCHEMES:
+            r = _quiet(mem_one, s, stalled=stalled, duration=200_000.0)
+            mem.append(r)
+            csv.append(f"garbage:{s}:{'stall' if stalled else 'nostall'},0,"
+                       f"final={r['garbage_final']};retired={r['retired']};"
+                       f"unreclaimed={r['unreclaimed_frac']:.3f}")
+    Path("results/memory_footprint.json").write_text(json.dumps(mem, indent=1))
+
+    # -- framework: POP block pool vs eager refcount pool --
+    from benchmarks.block_pool_bench import bench_pop, bench_refcount
+    for r in [_quiet(bench_refcount, 0.5), _quiet(bench_pop, 0.5),
+              _quiet(bench_pop, 0.5, stalled=True)]:
+        csv.append(f"pool:{r['name'].replace(' ', '_').replace(',', '')},"
+                   f"{1e6/max(r['steps_per_s'],1e-9):.2f},"
+                   f"steps_per_s={r['steps_per_s']:.0f}")
+
+    # -- kernels --
+    from benchmarks.kernel_bench import bench_flash, bench_linear_scan, bench_paged
+    for r in [_quiet(bench_flash), _quiet(bench_linear_scan), _quiet(bench_paged)]:
+        csv.append(f"kernel:{r['name'].split()[0]},{r['us_per_call']:.1f},"
+                   f"v5e_roofline_us={r['v5e_roofline_us']:.1f}")
+
+    # -- roofline table from the dry-run artifacts (if present) --
+    try:
+        from benchmarks.roofline_table import csv as roof_csv
+        lines = roof_csv().splitlines()[1:]
+        csv.extend(lines)
+    except Exception as e:  # noqa: BLE001
+        print(f"# roofline table unavailable: {e}")
+
+    print("\n".join(csv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Paper Figures 1-3: SMR throughput + memory across schemes, structures,
+thread counts, for update-heavy (50i/50d) and read-heavy (90c/5i/5d) mixes.
+
+Simulated-cycle throughput (ops per million cycles); sizes scaled down from
+the paper's (list 2K -> 128 keys etc.) to keep simulation time sane -- the
+*relative* orderings are the reproduction target (EXPERIMENTS.md §Paper).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.core.smr.registry import PAPER_SET
+from repro.core.workload import run_trial
+
+
+def run(structures=("HML", "LL", "HMHT", "DGT"), schemes=PAPER_SET,
+        threads=(1, 2, 4, 8), workloads=("update", "read"),
+        key_range=128, duration=300_000.0, seed=7, out=None):
+    results = []
+    for ds in structures:
+        for wl in workloads:
+            for n in threads:
+                for scheme in schemes:
+                    r = run_trial(ds, scheme, n, workload=wl,
+                                  key_range=key_range, duration=duration,
+                                  seed=seed)
+                    rec = {
+                        "structure": ds, "workload": wl, "threads": n,
+                        "scheme": scheme, "throughput": r.throughput,
+                        "ops": r.ops, "fences": r.fences,
+                        "signals": r.signals_sent, "publishes": r.publishes,
+                        "restarts": r.restarts,
+                        "garbage_peak": r.garbage_peak,
+                        "garbage_final": r.garbage_final,
+                        "freed": r.freed,
+                    }
+                    results.append(rec)
+                    print(f"{ds:5s} {wl:6s} t={n:<3d} {scheme:14s} "
+                          f"thr={r.throughput:9.1f} gpeak={r.garbage_peak:5d} "
+                          f"fences={r.fences:7d} sig={r.signals_sent:5d}")
+    if out:
+        Path(out).parent.mkdir(parents=True, exist_ok=True)
+        Path(out).write_text(json.dumps(results, indent=1))
+    return results
+
+
+def summarize(results):
+    """Ratios the paper reports: POP vs base algorithms."""
+    import collections
+    by = collections.defaultdict(dict)
+    for r in results:
+        by[(r["structure"], r["workload"], r["threads"])][r["scheme"]] = \
+            r["throughput"]
+    ratios = collections.defaultdict(list)
+    for key, t in by.items():
+        if "HP" in t and "HazardPtrPOP" in t:
+            ratios["HazardPtrPOP/HP"].append(t["HazardPtrPOP"] / t["HP"])
+        if "HPAsym" in t and "HazardPtrPOP" in t:
+            ratios["HazardPtrPOP/HPAsym"].append(t["HazardPtrPOP"] / t["HPAsym"])
+        if "HE" in t and "HazardEraPOP" in t:
+            ratios["HazardEraPOP/HE"].append(t["HazardEraPOP"] / t["HE"])
+        if "EBR" in t and "EpochPOP" in t:
+            ratios["EpochPOP/EBR"].append(t["EpochPOP"] / t["EBR"])
+        if "IBR" in t and "EpochPOP" in t:
+            ratios["EpochPOP/IBR"].append(t["EpochPOP"] / t["IBR"])
+    out = {}
+    for k, v in ratios.items():
+        out[k] = {"min": min(v), "max": max(v), "mean": sum(v) / len(v)}
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="results/smr_throughput.json")
+    args = ap.parse_args()
+    if args.quick:
+        res = run(structures=("HML", "HMHT"), threads=(2, 4),
+                  duration=150_000.0, out=args.out)
+    else:
+        res = run(out=args.out)
+    print(json.dumps(summarize(res), indent=1))
+
+
+if __name__ == "__main__":
+    main()

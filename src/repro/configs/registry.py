@@ -1,0 +1,84 @@
+"""--arch registry: one exact config per assigned architecture, the paper's
+own serving config, reduced smoke variants, and ``input_specs`` for the
+dry-run (ShapeDtypeStruct stand-ins, no allocation)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+
+ARCHS = [
+    "zamba2_2p7b", "gemma2_27b", "stablelm_12b", "starcoder2_7b",
+    "codeqwen15_7b", "olmoe_1b_7b", "deepseek_v3_671b", "rwkv6_1p6b",
+    "llama32_vision_90b", "whisper_small",
+]
+
+ALIASES = {
+    "zamba2-2.7b": "zamba2_2p7b",
+    "gemma2-27b": "gemma2_27b",
+    "stablelm-12b": "stablelm_12b",
+    "starcoder2-7b": "starcoder2_7b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "rwkv6-1.6b": "rwkv6_1p6b",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "whisper-small": "whisper_small",
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    mod_name = ALIASES.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    mod_name = ALIASES.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.SMOKE
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> Optional[str]:
+    """None if (arch x shape) is a valid dry-run cell, else the skip reason."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "long_500k needs sub-quadratic attention (DESIGN.md carve-outs)"
+    if shape.kind == "decode" and not cfg.decode_ok:
+        return "architecture has no decode step"
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    from repro.models.model import cache_shapes
+
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        specs["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    else:  # decode: one new token against a seq_len cache
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+        cache, _ = cache_shapes(cfg, B, S, cfg.dtype)
+        specs["cache"] = cache
+    if cfg.n_frontend_tokens and shape.kind != "decode":
+        specs["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs
+
+
+def all_cells():
+    """Yield (arch_name, shape_name) for the 40-cell baseline grid, with
+    skip reasons attached for the carved-out cells."""
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            yield arch, sname, cell_supported(cfg, shape)

@@ -1,0 +1,514 @@
+"""Deterministic TSO weak-memory simulator with POSIX-like signals.
+
+This is the substrate on which the paper's algorithms (HazardPtrPOP,
+HazardEraPOP, EpochPOP) and all baselines (HP, HPAsym, HE, EBR, IBR, NBR+)
+run.  CPython's GIL makes native threads sequentially consistent, so the
+store-load reordering that hazard pointers must fence against -- and that
+publish-on-ping elides -- cannot be expressed with real threads.  Here it can:
+
+* every simulated thread owns a FIFO **store buffer**; a plain ``store``
+  becomes globally visible only after a drain latency (jittered), a
+  ``fence``, an atomic RMW, or a process-wide ``membarrier``;
+* ``load`` forwards from the issuing thread's own buffer (store-to-load
+  forwarding) and otherwise reads globally-visible memory -- exactly x86-TSO;
+* **signals** are delivered at instruction boundaries within a bounded number
+  of simulated cycles (the paper's Assumption 1), and run a handler frame on
+  top of the interrupted computation -- or neutralize it (NBR);
+* an instrumented allocator raises :class:`UseAfterFree` the moment any
+  thread touches a freed cell, and recycles addresses LIFO so ABA is live.
+
+Threads are written as Python generators: every memory operation is a
+``yield`` to the scheduler, which advances the thread with the smallest local
+clock (discrete-event simulation).  Simulated-cycle throughput is the
+figure of merit reported by the benchmarks; wall time is irrelevant.
+"""
+
+from __future__ import annotations
+
+import heapq
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Generator, List, Optional, Tuple
+
+NULL = 0
+
+
+class SimError(Exception):
+    pass
+
+
+class UseAfterFree(SimError):
+    """A thread touched memory that had been freed (the bug class SMR prevents)."""
+
+    def __init__(self, tid: int, addr: int, op: str):
+        super().__init__(f"use-after-free: t{tid} {op} addr={addr}")
+        self.tid, self.addr, self.op = tid, addr, op
+
+
+class Neutralized(SimError):
+    """Raised inside a thread's operation when an NBR-style signal restarts it."""
+
+
+class DoubleFree(SimError):
+    pass
+
+
+@dataclass
+class Costs:
+    """Cycle costs, calibrated to the ratios on the paper's CascadeLake box.
+
+    A store-load fence on x86 is ~30-50 cycles when the store buffer is hot;
+    a signal round trip is a few microseconds (~10^4 cycles at 2.2GHz).  The
+    absolute numbers only matter relative to each other.
+    """
+
+    load: int = 2
+    store: int = 4            # shared store (coherence traffic)
+    local: int = 1            # thread-local reservation bookkeeping (POP READ)
+    fence: int = 40           # store-load fence (drain store buffer)
+    cas: int = 30
+    faa: int = 30
+    atomic_store: int = 8     # store + immediate drain of that entry
+    membarrier: int = 4000    # sys_membarrier() on the reclaimer (HPAsym)
+    signal_send: int = 800    # pthread_kill per target
+    signal_latency: int = 6000  # deliver + schedule handler (bounded, Asm. 1)
+    handler_overhead: int = 400  # kernel frame setup/teardown
+    spin: int = 12            # one iteration of a wait loop (incl. pause)
+    work: int = 1
+    drain_latency: int = 90   # store buffer residency before async drain
+    drain_jitter: int = 60
+
+
+@dataclass
+class Stats:
+    ops: int = 0
+    reads: int = 0
+    loads: int = 0
+    stores: int = 0
+    fences: int = 0
+    cas: int = 0
+    signals_sent: int = 0
+    signals_handled: int = 0
+    membarriers: int = 0
+    retired: int = 0
+    freed: int = 0
+    restarts: int = 0
+    reclaim_events: int = 0
+    garbage_peak: int = 0     # max total unreclaimed retired nodes
+    publishes: int = 0
+
+
+class Allocator:
+    """Bump + LIFO-recycling allocator with use-after-free tripwires.
+
+    States per cell: 0 = unallocated, 1 = live, 2 = freed.  ``free`` keeps the
+    cell contents (so racy readers observe stale values, as on real hardware)
+    but flips state so the engine can detect the touch.
+    """
+
+    LIVE, FREED = 1, 2
+
+    def __init__(self, mem: "Memory"):
+        self.mem = mem
+        self.freelist: Dict[int, List[int]] = {}   # size -> [addr] (LIFO => ABA)
+        self.sizes: Dict[int, int] = {}            # live/freed block -> size
+        self.live_count = 0
+        self.freed_count = 0
+
+    def alloc(self, nfields: int) -> int:
+        fl = self.freelist.get(nfields)
+        if fl:
+            addr = fl.pop()          # LIFO: maximizes ABA / recycling pressure
+        else:
+            addr = self.mem.brk
+            self.mem.brk += nfields
+            self.mem._grow(self.mem.brk)
+        self.sizes[addr] = nfields
+        for i in range(nfields):
+            self.mem.state[addr + i] = self.LIVE
+            self.mem.cells[addr + i] = 0
+        self.live_count += 1
+        return addr
+
+    def free(self, addr: int) -> None:
+        size = self.sizes.get(addr)
+        if size is None or self.mem.state[addr] != self.LIVE:
+            raise DoubleFree(f"double/invalid free at {addr}")
+        for i in range(size):
+            self.mem.state[addr + i] = self.FREED
+        self.freelist.setdefault(size, []).append(addr)
+        self.live_count -= 1
+        self.freed_count += 1
+
+
+class Memory:
+    """Globally-visible cells + per-thread store buffers (x86-TSO)."""
+
+    def __init__(self, nthreads: int):
+        self.cells: List[int] = []
+        self.state: bytearray = bytearray()
+        self.brk = 1                      # address 0 is NULL
+        self._grow(1)
+        self.alloc = Allocator(self)
+        # per-thread store buffer: list of [addr, value, issue_time, vis_time]
+        self.buffers: List[List[List[int]]] = [[] for _ in range(nthreads)]
+
+    def _grow(self, n: int) -> None:
+        if n > len(self.cells):
+            extra = n - len(self.cells) + 256
+            self.cells.extend([0] * extra)
+            self.state.extend(b"\x00" * extra)
+
+    # -- raw accessors used by the engine (state checks live there) --
+
+    def drain_until(self, tid: int, now: float) -> None:
+        """Apply this thread's buffered stores whose visibility time has come."""
+        buf = self.buffers[tid]
+        while buf and buf[0][3] <= now:
+            addr, val, _, _ = buf.pop(0)
+            self.cells[addr] = val
+
+    def drain_all(self, tid: int) -> None:
+        buf = self.buffers[tid]
+        while buf:
+            addr, val, _, _ = buf.pop(0)
+            self.cells[addr] = val
+
+    def drain_issued_before(self, tid: int, t: float) -> None:
+        """membarrier: make all stores *issued* before time t visible."""
+        buf = self.buffers[tid]
+        keep = []
+        for e in buf:
+            if e[2] <= t:
+                self.cells[e[0]] = e[1]
+            else:
+                keep.append(e)
+        self.buffers[tid][:] = keep
+
+    def forwarded(self, tid: int, addr: int) -> Optional[int]:
+        """Store-to-load forwarding from the issuing thread's own buffer."""
+        buf = self.buffers[tid]
+        for e in reversed(buf):
+            if e[0] == addr:
+                return e[1]
+        return None
+
+
+@dataclass
+class _Frame:
+    gen: Generator
+    is_handler: bool = False
+
+
+class ThreadCtx:
+    """Per-thread view handed to algorithm code.
+
+    All memory operations are generators (``yield from t.load(a)``); every
+    yield is a scheduling point where signals may be delivered and other
+    threads may run.  Thread-LOCAL algorithm state (retire lists, POP's
+    localReservations) is plain Python state on this object -- visible to the
+    same thread's signal handler without any memory-model ceremony, exactly
+    like the paper.
+    """
+
+    def __init__(self, engine: "Engine", tid: int):
+        self.engine = engine
+        self.tid = tid
+        self.clock = 0.0
+        self.frames: List[_Frame] = []
+        self.done = False
+        self.pending_signal_at: Optional[float] = None
+        self.signal_handler: Optional[Callable[["ThreadCtx"], Generator]] = None
+        self.neutralizable = False         # NBR: restartable region?
+        self.pending_neutralize = False
+        self.stalled_until = 0.0
+        self.stats = Stats()
+        self.local: Dict[str, Any] = {}    # scheme-private thread-local state
+        self.rng = random.Random((engine.seed << 8) ^ tid)
+
+    # ---- memory operations (each is one scheduling point) ----
+
+    def load(self, addr: int):
+        v = yield ("load", addr)
+        return v
+
+    def store(self, addr: int, val: int):
+        yield ("store", addr, val)
+
+    def atomic_store(self, addr: int, val: int):
+        yield ("atomic_store", addr, val)
+
+    def cas(self, addr: int, expected: int, new: int):
+        ok = yield ("cas", addr, expected, new)
+        return ok
+
+    def faa(self, addr: int, delta: int):
+        old = yield ("faa", addr, delta)
+        return old
+
+    def fence(self):
+        yield ("fence",)
+
+    def membarrier(self):
+        yield ("membarrier",)
+
+    def local_op(self, cost: Optional[int] = None):
+        """Thread-local work (e.g. POP's local reservation store)."""
+        yield ("local", cost)
+
+    def spin(self):
+        yield ("spin",)
+
+    def work(self, cycles: int):
+        yield ("work", cycles)
+
+    def alloc(self, nfields: int):
+        addr = yield ("alloc", nfields)
+        return addr
+
+    def free(self, addr: int):
+        yield ("free", addr)
+
+    def send_signal(self, target_tid: int):
+        yield ("signal", target_tid)
+
+    def now(self) -> float:
+        return self.clock
+
+
+class Engine:
+    """Discrete-event scheduler over generator threads."""
+
+    def __init__(
+        self,
+        nthreads: int,
+        costs: Optional[Costs] = None,
+        seed: int = 0,
+        preempt_prob: float = 0.0,
+        preempt_cycles: int = 20000,
+    ):
+        self.n = nthreads
+        self.costs = costs or Costs()
+        self.seed = seed
+        self.rng = random.Random(seed)
+        self.mem = Memory(nthreads)
+        self.threads = [ThreadCtx(self, i) for i in range(nthreads)]
+        self.preempt_prob = preempt_prob
+        self.preempt_cycles = preempt_cycles
+        self.time = 0.0
+        self._drains: List[Tuple[float, int]] = []
+        self.uaf_check = True
+        self.trace: Optional[List] = None
+        # monotonically jittered per-op cost adds scheduling diversity
+        self.jitter = 0.25
+
+    # ---- setup ----
+
+    def spawn(self, tid: int, body: Callable[[ThreadCtx], Generator]) -> None:
+        t = self.threads[tid]
+        t.frames = [_Frame(body(t))]
+        t.done = False
+
+    def set_signal_handler(self, handler: Callable[[ThreadCtx], Generator]) -> None:
+        for t in self.threads:
+            t.signal_handler = handler
+
+    def alloc_shared(self, n: int) -> int:
+        """Allocate engine-lifetime shared cells (reservation arrays etc.)."""
+        return self.mem.alloc.alloc(n)
+
+    # ---- signal machinery ----
+
+    def deliver_signal(self, sender: ThreadCtx, target_tid: int) -> None:
+        tgt = self.threads[target_tid]
+        if tgt.done:
+            return  # pthread_kill returns ESRCH; reclaimer skips dead threads
+        at = sender.clock + self.costs.signal_latency * (1 + self.rng.random() * 0.5)
+        # coalesce: POSIX keeps at most one pending instance per signo
+        if tgt.pending_signal_at is None or at < tgt.pending_signal_at:
+            tgt.pending_signal_at = at
+        sender.stats.signals_sent += 1
+
+    # ---- core step ----
+
+    def _cost(self, c: float) -> float:
+        return c * (1.0 + self.rng.random() * self.jitter)
+
+    def _exec(self, t: ThreadCtx, op: Tuple) -> Any:
+        mem, costs = self.mem, self.costs
+        kind = op[0]
+        now = t.clock
+        if kind == "load":
+            addr = op[1]
+            self._check(t, addr, "load")
+            t.clock += self._cost(costs.load)
+            t.stats.loads += 1
+            fwd = mem.forwarded(t.tid, addr)
+            if fwd is not None:
+                return fwd
+            self._apply_drains(t.clock)
+            return mem.cells[addr]
+        if kind == "store":
+            addr, val = op[1], op[2]
+            self._check(t, addr, "store")
+            t.clock += self._cost(costs.store)
+            t.stats.stores += 1
+            vis = t.clock + costs.drain_latency + self.rng.random() * costs.drain_jitter
+            mem.buffers[t.tid].append([addr, val, t.clock, vis])
+            heapq.heappush(self._drains, (vis, t.tid))
+            return None
+        if kind == "atomic_store":
+            addr, val = op[1], op[2]
+            self._check(t, addr, "store")
+            t.clock += self._cost(costs.atomic_store)
+            t.stats.stores += 1
+            mem.drain_all(t.tid)
+            mem.cells[addr] = val
+            return None
+        if kind == "cas":
+            addr, exp, new = op[1], op[2], op[3]
+            self._check(t, addr, "cas")
+            t.clock += self._cost(costs.cas)
+            t.stats.cas += 1
+            mem.drain_all(t.tid)              # RMW is a full barrier on x86
+            self._apply_drains(t.clock)
+            if mem.cells[addr] == exp:
+                mem.cells[addr] = new
+                return True
+            return False
+        if kind == "faa":
+            addr, delta = op[1], op[2]
+            self._check(t, addr, "faa")
+            t.clock += self._cost(costs.faa)
+            t.stats.cas += 1
+            mem.drain_all(t.tid)
+            self._apply_drains(t.clock)
+            old = mem.cells[addr]
+            mem.cells[addr] = old + delta
+            return old
+        if kind == "fence":
+            t.clock += self._cost(costs.fence)
+            t.stats.fences += 1
+            mem.drain_all(t.tid)
+            return None
+        if kind == "membarrier":
+            t.clock += self._cost(costs.membarrier)
+            t.stats.membarriers += 1
+            issue_cut = now
+            for other in range(self.n):
+                mem.drain_issued_before(other, issue_cut)
+            return None
+        if kind == "local":
+            t.clock += self._cost(op[1] if op[1] is not None else costs.local)
+            return None
+        if kind == "spin":
+            t.clock += self._cost(costs.spin)
+            self._apply_drains(t.clock)
+            return None
+        if kind == "work":
+            t.clock += self._cost(op[1])
+            return None
+        if kind == "alloc":
+            t.clock += self._cost(costs.store)
+            return mem.alloc.alloc(op[1])
+        if kind == "free":
+            t.clock += self._cost(costs.store)
+            mem.alloc.free(op[1])
+            t.stats.freed += 1
+            return None
+        if kind == "signal":
+            t.clock += self._cost(costs.signal_send)
+            self.deliver_signal(t, op[1])
+            return None
+        raise SimError(f"unknown op {op!r}")
+
+    def _check(self, t: ThreadCtx, addr: int, what: str) -> None:
+        if not self.uaf_check:
+            return
+        st = self.mem.state[addr] if addr < len(self.mem.state) else 0
+        if st != Allocator.LIVE:
+            raise UseAfterFree(t.tid, addr, what)
+
+    def _apply_drains(self, now: float) -> None:
+        """Make asynchronous store-buffer drains visible up to global time."""
+        dr = self._drains
+        mem = self.mem
+        while dr and dr[0][0] <= now:
+            _, tid = heapq.heappop(dr)
+            mem.drain_until(tid, now)
+
+    # ---- run loop ----
+
+    def run(self, max_steps: int = 50_000_000) -> None:
+        self._drains: List[Tuple[float, int]] = []
+        live = [t for t in self.threads if t.frames and not t.done]
+        steps = 0
+        heap = [(t.clock, t.tid) for t in live]
+        heapq.heapify(heap)
+        while heap:
+            steps += 1
+            if steps > max_steps:
+                raise SimError("simulation step budget exceeded (deadlock/livelock?)")
+            _, tid = heapq.heappop(heap)
+            t = self.threads[tid]
+            if t.done:
+                continue
+            # signal delivery at instruction boundary
+            if (
+                t.pending_signal_at is not None
+                and t.pending_signal_at <= t.clock
+                and t.signal_handler is not None
+                and not (t.frames and t.frames[-1].is_handler)
+            ):
+                t.pending_signal_at = None
+                t.clock += self.costs.handler_overhead
+                # The handler itself decides whether to publish (POP) or to
+                # request a neutralizing unwind (NBR) by setting
+                # ``t.pending_neutralize`` -- the unwind is performed when the
+                # *body* frame is next resumed, mirroring a longjmp out of a
+                # POSIX handler.
+                t.frames.append(_Frame(t.signal_handler(t), is_handler=True))
+                t.stats.signals_handled += 1
+            self._step_frame(t)
+            if not t.done:
+                # random preemption (descheduling) pressure
+                if self.preempt_prob and self.rng.random() < self.preempt_prob:
+                    t.clock += self.preempt_cycles * (0.5 + self.rng.random())
+                heapq.heappush(heap, (t.clock, t.tid))
+            self.time = max(self.time, t.clock)
+
+    def _step_frame(self, t: ThreadCtx) -> None:
+        frame = t.frames[-1]
+        send_val = getattr(frame, "_pending", None)
+        frame._pending = None
+        try:
+            if t.pending_neutralize and not frame.is_handler:
+                t.pending_neutralize = False
+                t.stats.restarts += 1
+                op = frame.gen.throw(Neutralized())
+            else:
+                op = frame.gen.send(send_val)
+        except StopIteration:
+            t.frames.pop()
+            if not t.frames:
+                t.done = True
+            return
+        result = self._exec(t, op)
+        frame._pending = result
+
+
+def run_threads(
+    nthreads: int,
+    bodies: List[Callable[[ThreadCtx], Generator]],
+    seed: int = 0,
+    costs: Optional[Costs] = None,
+    handler: Optional[Callable] = None,
+    preempt_prob: float = 0.0,
+) -> Engine:
+    eng = Engine(nthreads, costs=costs, seed=seed, preempt_prob=preempt_prob)
+    if handler is not None:
+        eng.set_signal_handler(handler)
+    for i, b in enumerate(bodies):
+        eng.spawn(i, b)
+    eng.run()
+    return eng

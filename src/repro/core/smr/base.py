@@ -1,0 +1,129 @@
+"""Common SMR interface (the paper's programmer view, §4.1.1).
+
+Every scheme exposes the same five calls the paper's setbench uses, all as
+simulator generators:
+
+    start_op / read(slot, ptr_addr) / clear / retire(addr) / end_op
+
+plus ``alloc_node`` (so era-based schemes can tag birth eras) and an optional
+``enter_write`` hook (a no-op everywhere except NBR+, which publishes its
+reservations and leaves the restartable region there).
+
+Data structures are written once against this interface and run unchanged
+under all ten schemes -- the paper's "drop-in replacement" property.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Generator, List, Optional
+
+from repro.core.sim.engine import NULL, Engine, ThreadCtx
+
+MAX_ERA = 1 << 60
+
+
+class SMRScheme:
+    name = "base"
+    robust = True
+    uses_signals = False
+
+    def __init__(
+        self,
+        engine: Engine,
+        max_hp: int = 8,
+        reclaim_freq: int = 64,
+        epoch_freq: int = 32,
+    ):
+        self.engine = engine
+        self.n = engine.n
+        self.max_hp = max_hp
+        self.reclaim_freq = reclaim_freq
+        self.epoch_freq = epoch_freq
+        # era metadata (engine-side bookkeeping, see DESIGN.md §8.2)
+        self.birth: Dict[int, int] = {}
+        self.retire_era: Dict[int, int] = {}
+        # global garbage accounting (for the paper's memory plots)
+        self.garbage = 0
+        self.garbage_peak = 0
+        self.frees = 0
+        self.reclaim_calls = 0
+
+    # ---- lifecycle ----
+
+    def thread_init(self, t: ThreadCtx) -> None:
+        t.local["retire"] = []
+
+    def handler(self, t: ThreadCtx) -> Generator:
+        """Signal handler body; schemes that use signals override."""
+        return
+        yield  # pragma: no cover
+
+    # ---- programmer interface ----
+
+    def start_op(self, t: ThreadCtx) -> Generator:
+        return
+        yield
+
+    def end_op(self, t: ThreadCtx) -> Generator:
+        yield from self.clear(t)
+
+    def read(self, t: ThreadCtx, slot: int, ptr_addr: int, decode=None) -> Generator:
+        """Protected read of *ptr_addr.  ``decode`` maps the raw cell value to
+        the node address to reserve (e.g. stripping a mark bit)."""
+        raise NotImplementedError
+
+    def clear(self, t: ThreadCtx) -> Generator:
+        return
+        yield
+
+    def enter_write(self, t: ThreadCtx, ptrs: List[int]) -> Generator:
+        """NBR hook: publish reservations, end the restartable region."""
+        return
+        yield
+
+    def exit_write(self, t: ThreadCtx) -> Generator:
+        return
+        yield
+
+    def alloc_node(self, t: ThreadCtx, nfields: int) -> Generator:
+        addr = yield from t.alloc(nfields)
+        return addr
+
+    def retire(self, t: ThreadCtx, addr: int) -> Generator:
+        raise NotImplementedError
+
+    # ---- helpers ----
+
+    def _account_retire(self, t: ThreadCtx) -> None:
+        t.stats.retired += 1
+        self.garbage += 1
+        if self.garbage > self.garbage_peak:
+            self.garbage_peak = self.garbage
+
+    def _free(self, t: ThreadCtx, addr: int) -> Generator:
+        self.birth.pop(addr, None)
+        self.retire_era.pop(addr, None)
+        yield from t.free(addr)
+        self.garbage -= 1
+        self.frees += 1
+
+    def flush(self, t: ThreadCtx) -> Generator:
+        """Best-effort final reclaim at thread exit (keeps end-state stats honest)."""
+        return
+        yield
+
+
+class NoReclamation(SMRScheme):
+    """NR: the leaky baseline -- retire leaks, reads are bare loads."""
+
+    name = "NR"
+    robust = False
+
+    def read(self, t: ThreadCtx, slot: int, ptr_addr: int, decode=None) -> Generator:
+        ptr = yield from t.load(ptr_addr)
+        return ptr
+
+    def retire(self, t: ThreadCtx, addr: int) -> Generator:
+        self._account_retire(t)
+        return
+        yield

@@ -1,0 +1,38 @@
+"""Name -> SMR scheme factory, mirroring the paper's benchmark lineup."""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.core.sim.engine import Engine
+from repro.core.smr.base import NoReclamation, SMRScheme
+from repro.core.smr.ebr import EBR, IBR
+from repro.core.smr.epoch_pop import EpochPOP
+from repro.core.smr.he import HazardEras
+from repro.core.smr.hp import HazardPointers, HazardPointersAsym, HazardPointersBroken
+from repro.core.smr.nbr import NBR
+from repro.core.smr.pop import HazardEraPOP, HazardPtrPOP
+
+SCHEMES: Dict[str, Callable[..., SMRScheme]] = {
+    "NR": NoReclamation,
+    "HP": HazardPointers,
+    "HP-broken": HazardPointersBroken,
+    "HPAsym": HazardPointersAsym,
+    "HE": HazardEras,
+    "EBR": EBR,
+    "IBR": IBR,
+    "NBR+": NBR,
+    "HazardPtrPOP": HazardPtrPOP,
+    "HazardEraPOP": HazardEraPOP,
+    "EpochPOP": EpochPOP,
+}
+
+# the paper's headline comparison set (Figures 1-4)
+PAPER_SET = [
+    "NR", "HP", "HPAsym", "HE", "EBR", "IBR", "NBR+",
+    "HazardPtrPOP", "HazardEraPOP", "EpochPOP",
+]
+
+
+def make_scheme(name: str, engine: Engine, **kw) -> SMRScheme:
+    return SCHEMES[name](engine, **kw)

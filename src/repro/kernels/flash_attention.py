@@ -1,0 +1,155 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU-native design (DESIGN.md §HW adaptation):
+  * grid = (batch*kv_head, q_blocks, kv_blocks); kv is the INNERMOST
+    (sequential) grid axis so the online-softmax running state (m, l, acc)
+    lives in VMEM scratch across kv steps -- the TPU analogue of a CUDA
+    flash kernel's register state.
+  * BlockSpecs tile q/k/v into (block_q, head_dim) / (block_kv, head_dim)
+    VMEM windows; head_dim padded to the 128-lane MXU width by the wrapper.
+  * GQA: q blocks carry the G query heads of one kv head: the q tile is
+    (block_q, G*head_dim) reshaped in-kernel, so K/V tiles are fetched once
+    per kv head, not once per query head.
+  * causal/window masking is positional (broadcasted iota), and fully-masked
+    kv blocks are skipped with pl.when on the grid index -- no wasted MXU
+    work past the diagonal (the XLA reference pays 2x there).
+
+Validated in interpret mode against kernels/ref.py on CPU (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, causal, window, softcap, block_q, block_kv,
+                  n_kv_blocks, g, seq_q, seq_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    def _body():
+        q = q_ref[0]                       # (block_q * g, d) packed G heads
+        k = k_ref[0]                       # (block_kv, d)
+        v = v_ref[0]                       # (block_kv, dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq*g, bkv)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // g + q_start
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + k_start
+        mask = cols < seq_kv
+        if causal:
+            mask = mask & (cols <= rows)
+        if window:
+            mask = mask & (cols > rows - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    if causal:
+        # skip kv blocks entirely above the diagonal (real work skipping --
+        # the TPU grid still visits the step, but no MXU op issues)
+        first_q_row = q_start
+        pl.when(k_start <= first_q_row + block_q - 1)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,               # (B, Sq, H, D)
+    k: jnp.ndarray,               # (B, Sk, Hkv, D)
+    v: jnp.ndarray,               # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    block_q: int = 256,
+    block_kv: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    Sk, Hkv, Dv = k.shape[1], k.shape[2], v.shape[3]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    block_q = min(block_q, max(Sq, 8))
+    block_kv = min(block_kv, max(Sk, 8))
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_kv
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    Sq_p, Sk_p = Sq + pad_q, Sk + pad_k
+    nq, nk = Sq_p // block_q, Sk_p // block_kv
+
+    # pack (B, Hkv) into the leading grid axis; interleave G q-heads per row
+    # layout: (B*Hkv, Sq*G, D) with row index = s*G + g
+    qh = qp.reshape(B, Sq_p, Hkv, G, D).transpose(0, 2, 1, 3, 4)
+    qh = qh.reshape(B * Hkv, Sq_p * G, D)
+    kh = kp.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk_p, D)
+    vh = vp.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk_p, Dv)
+
+    grid = (B * Hkv, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_kv=block_kv, n_kv_blocks=nk,
+        g=G, seq_q=Sq, seq_kv=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q * G, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, Dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q * G, Dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, Sq_p * G, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * G, 1), jnp.float32),
+            pltpu.VMEM((block_q * G, 1), jnp.float32),
+            pltpu.VMEM((block_q * G, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+
+    out = out.reshape(B, Hkv, Sq_p, G, Dv).transpose(0, 2, 1, 3, 4)
+    out = out.reshape(B, Sq_p, H, Dv)
+    return out[:, :Sq]

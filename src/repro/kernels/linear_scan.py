@@ -1,0 +1,147 @@
+"""Chunked gated linear recurrence (Mamba2 / RWKV6) as a Pallas TPU kernel.
+
+TPU-native design: the recurrence S_t = a_t S_{t-1} + k_t v_t^T is
+reformulated as chunk-parallel matmuls (SSD decomposition) so the MXU does
+the work instead of a sequential VPU loop:
+
+  * grid = (batch*heads, n_chunks); chunks are the sequential axis, the
+    (K, Vd) state matrix lives in fp32 VMEM scratch across chunk steps.
+  * per chunk: intra-chunk (L, L) score matmul (masked lower-triangular,
+    decay-weighted) + inter-chunk (L, K) x (K, Vd) state matmul + state
+    update (K, L) x (L, Vd) -- three MXU ops per chunk, no per-step scan.
+  * decay handling is the factored form q*exp(cl), k*exp(-cl) (clamped);
+    scalar (mamba2) decay broadcasts over K inside the kernel.
+
+Oracle: kernels/ref.py::linear_scan_ref / linear_scan_exact.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(q_ref, k_ref, v_ref, ld_ref, u_ref, o_ref, stf_ref, st_scr,
+                 *, chunk, n_chunks, vec_decay, has_bonus, clamp):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        st_scr[...] = jnp.zeros_like(st_scr)
+
+    q = q_ref[0].astype(jnp.float32)        # (L, K)
+    k = k_ref[0].astype(jnp.float32)        # (L, K)
+    v = v_ref[0].astype(jnp.float32)        # (L, Vd)
+    ld = ld_ref[0].astype(jnp.float32)      # (L, K) or (L, 1)
+
+    cl = jnp.cumsum(ld, axis=0)             # inclusive cumulative log decay
+    clq = cl - ld if has_bonus else cl      # rwkv outputs read S_{t-1}
+
+    q_eff = q * jnp.exp(clq)
+    k_eff = k * jnp.exp(jnp.minimum(-cl, clamp))
+
+    scores = jax.lax.dot_general(q_eff, k_eff, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (L,L)
+    rows = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(rows > cols, scores, 0.0)
+    if has_bonus:
+        u = u_ref[0].astype(jnp.float32)    # (1, K) broadcast row
+        diag = jnp.sum(q * k * u, axis=1, keepdims=True)       # (L,1)
+    else:
+        diag = jnp.sum(q * k, axis=1, keepdims=True)
+    scores = scores + jnp.where(rows == cols, diag, 0.0)
+
+    st = st_scr[...]                         # (K, Vd) fp32
+    y = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y + jax.lax.dot_general(q_eff, st, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+    total = jnp.exp(cl[-1:])                 # (1, K) or (1,1)
+    rem = jnp.exp(cl[-1:] - cl)              # (L, K/1) decay j -> chunk end
+    k_rem = k * rem
+    st_new = st * total.reshape(-1, 1) if not vec_decay else st * total.T
+    st_new = st_new + jax.lax.dot_general(
+        k_rem, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (K, Vd)
+    st_scr[...] = st_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        stf_ref[0] = st_new
+
+
+def linear_scan_pallas(
+    q: jnp.ndarray,               # (B, S, H, K)
+    k: jnp.ndarray,
+    v: jnp.ndarray,               # (B, S, H, Vd)
+    log_decay: jnp.ndarray,       # (B, S, H) scalar or (B, S, H, K) vector
+    *,
+    state: Optional[jnp.ndarray] = None,   # initial state unsupported in-kernel
+    bonus: Optional[jnp.ndarray] = None,   # (H, K)
+    chunk: int = 128,
+    clamp: float = 75.0,
+    interpret: bool = False,
+):
+    assert state is None, "kernel computes from zero state (prefill use)"
+    B, S, H, K = q.shape
+    Vd = v.shape[-1]
+    vec = log_decay.ndim == 4
+    ld = log_decay if vec else log_decay[..., None]
+    chunk = min(chunk, max(S, 8))
+    pad = (-S) % chunk
+    if pad:
+        z = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, z); k = jnp.pad(k, z); v = jnp.pad(v, z)
+        ld = jnp.pad(ld, z)                  # zero log-decay = no decay: fine
+    Sp = S + pad
+    n = Sp // chunk
+
+    # (B*H, S, K) layout, chunk along S
+    def bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, Sp, x.shape[-1])
+
+    qh, kh, vh, ldh = bh(q), bh(k), bh(v), bh(ld)
+    Kd = ldh.shape[-1]
+    if bonus is None:
+        u = jnp.zeros((H, 1, K), jnp.float32)
+    else:
+        u = bonus.reshape(H, 1, K).astype(jnp.float32)
+    u = jnp.tile(u, (B, 1, 1))               # (B*H, 1, K)
+
+    grid = (B * H, n)
+    kernel = functools.partial(_scan_kernel, chunk=chunk, n_chunks=n,
+                               vec_decay=vec, has_bonus=bonus is not None,
+                               clamp=clamp)
+    out, st = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, Vd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, Kd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, K), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, Vd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, K, Vd), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Sp, Vd), v.dtype),
+            jax.ShapeDtypeStruct((B * H, K, Vd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, Vd), jnp.float32)],
+        interpret=interpret,
+    )(qh, kh, vh, ldh, u)
+
+    out = out.reshape(B, H, Sp, Vd).transpose(0, 2, 1, 3)[:, :S]
+    st = st.reshape(B, H, K, Vd)
+    return out, st

@@ -1,0 +1,81 @@
+"""jit'd kernel dispatchers.
+
+Every op has three implementations selected by ``impl`` (or the global
+default set via :func:`set_default_impl`):
+
+  * ``"xla"``      -- the chunked pure-jnp path (kernels/ref.py). Used for
+                      the multi-pod dry-run and CPU execution: fully
+                      shardable under pjit, memory-bounded at 32k/500k.
+  * ``"pallas"``   -- the TPU Pallas kernel (kernels/*.py), compiled.
+  * ``"interpret"``-- the same Pallas kernel in interpret mode (CPU
+                      validation of the TPU kernel body).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+_DEFAULT_IMPL = "xla"
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("xla", "pallas", "interpret")
+    _DEFAULT_IMPL = impl
+
+
+def get_default_impl() -> str:
+    return _DEFAULT_IMPL
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None, impl: Optional[str] = None,
+                    q_block=512, kv_block=1024):
+    impl = impl or _DEFAULT_IMPL
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.flash_attention import flash_attention_pallas
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, interpret=(impl == "interpret"))
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                    softcap=softcap, scale=scale,
+                                    q_block=q_block, kv_block=kv_block)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, window=0, softcap=0.0,
+                     scale=None, impl: Optional[str] = None):
+    # decode is gather/BW-bound; the XLA path is already a single fused pass
+    return _ref.decode_attention_ref(q, k_cache, v_cache, kv_len,
+                                     window=window, softcap=softcap, scale=scale)
+
+
+def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
+                    softcap=0.0, scale=None, impl: Optional[str] = None):
+    impl = impl or _DEFAULT_IMPL
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.paged_attention import paged_attention_pallas
+        return paged_attention_pallas(q, k_pages, v_pages, block_table,
+                                      lengths, softcap=softcap, scale=scale,
+                                      interpret=(impl == "interpret"))
+    return _ref.paged_attention_ref(q, k_pages, v_pages, block_table, lengths,
+                                    softcap=softcap, scale=scale)
+
+
+def linear_scan(q, k, v, log_decay, *, state=None, bonus=None, chunk=128,
+                impl: Optional[str] = None):
+    impl = impl or _DEFAULT_IMPL
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.linear_scan import linear_scan_pallas
+        return linear_scan_pallas(q, k, v, log_decay, state=state, bonus=bonus,
+                                  chunk=chunk, interpret=(impl == "interpret"))
+    return _ref.linear_scan_ref(q, k, v, log_decay, state=state, bonus=bonus,
+                                chunk=chunk)
+
+
+def linear_scan_step(q, k, v, log_decay, state, bonus=None):
+    return _ref.linear_scan_step(q, k, v, log_decay, state, bonus)

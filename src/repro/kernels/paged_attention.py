@@ -1,0 +1,116 @@
+"""Paged decode attention as a Pallas TPU kernel -- the device half of the
+POP-managed KV block pool (DESIGN.md §2.3).
+
+The block table produced by the host-side ``runtime/block_pool.py`` is a
+*scalar-prefetch* operand: the BlockSpec index_map reads it to decide which
+physical page of the pool to DMA into VMEM next, so the gather happens in
+the memory pipeline (double-buffered page fetches), not as a materialized
+(B, max_pages*page, ...) tensor in HBM like the XLA reference.
+
+grid = (B, Hkv, n_pages); pages are the sequential axis with the online
+softmax state (m, l, acc) in VMEM scratch.  Dead table entries (-1) are
+masked and their DMA redirected to page 0.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, page, n_pages, scale, softcap, g):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # (page, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)       # (page, Dv)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + pi * page
+    valid = (pos < len_ref[b]) & (table_ref[b, pi] >= 0)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    m_scr[...] = m_new
+    l_scr[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(pi == n_pages - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+def paged_attention_pallas(
+    q: jnp.ndarray,               # (B, H, D)
+    k_pages: jnp.ndarray,         # (P, page, Hkv, D)
+    v_pages: jnp.ndarray,         # (P, page, Hkv, Dv)
+    block_table: jnp.ndarray,     # (B, max_pages) int32, -1 padded
+    lengths: jnp.ndarray,         # (B,) int32
+    *,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    Dv = v_pages.shape[-1]
+    G = H // Hkv
+    max_pages = block_table.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    qh = q.reshape(B, Hkv, G, D)
+    safe_table = jnp.maximum(block_table, 0).astype(jnp.int32)
+
+    grid = (B, Hkv, max_pages)
+    kernel = functools.partial(_paged_kernel, page=page, n_pages=max_pages,
+                               scale=scale, softcap=softcap, g=G)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,        # block table + lengths
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), lambda b, h, p, tbl, lens: (b, h, 0, 0)),
+                pl.BlockSpec((1, page, 1, D),
+                             lambda b, h, p, tbl, lens: (tbl[b, p], 0, h, 0)),
+                pl.BlockSpec((1, page, 1, Dv),
+                             lambda b, h, p, tbl, lens: (tbl[b, p], 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, Dv),
+                                   lambda b, h, p, tbl, lens: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, Dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), q.dtype),
+        interpret=interpret,
+    )(safe_table, lengths.astype(jnp.int32), qh, k_pages, v_pages)
+
+    return out.reshape(B, H, Dv)

@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on the
+production mesh and extract memory/cost/collective analysis for §Roofline.
+
+MUST be executed as its own process (python -m repro.launch.dryrun ...): the
+512 placeholder devices are created by the XLA_FLAGS line above, BEFORE any
+other import pulls in jax.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2_27b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import SHAPES  # noqa: E402
+from repro.configs.registry import (ARCHS, cell_supported, get_config,  # noqa: E402
+                                    input_specs)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.model import abstract_params, cache_shapes, params_logical_axes  # noqa: E402
+from repro.optim.adamw import AdamWState  # noqa: E402
+from repro.parallel import sharding as sh  # noqa: E402
+from repro.roofline import analysis as roof  # noqa: E402
+from repro.train.train_step import (make_prefill_step, make_serve_step,  # noqa: E402
+                                    make_train_step)
+
+
+def _abstract_opt_state(p_abs):
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      m=jax.tree.map(f32, p_abs),
+                      v=jax.tree.map(f32, p_abs))
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               cfg=None, remat=None):
+    """Lower one cell; returns (lowered, meta)."""
+    cfg = cfg or get_config(arch)
+    if remat:
+        cfg = cfg.scaled(remat=remat)
+    shape = SHAPES[shape_name]
+    skip = cell_supported(cfg, shape)
+    if skip:
+        return None, {"skip": skip}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sh.set_mesh(mesh)
+    n_dev = mesh.devices.size
+
+    p_abs = abstract_params(cfg)
+    p_axes = params_logical_axes(cfg)
+    p_sh = sh.tree_shardings(mesh, p_axes, p_abs)
+    specs = input_specs(cfg, shape)
+    cache_axes = None
+    if "cache" in specs:
+        _, cache_axes = cache_shapes(cfg, shape.global_batch, shape.seq_len,
+                                     cfg.dtype)
+    in_sh = sh.input_shardings(mesh, specs, cache_axes)
+
+    if shape.kind == "train":
+        o_abs = _abstract_opt_state(p_abs)
+        o_sh = AdamWState(
+            step=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            m=p_sh, v=p_sh)
+        step = make_train_step(cfg)
+        batch_abs = {k: specs[k] for k in ("tokens", "targets")}
+        batch_sh = {k: in_sh[k] for k in ("tokens", "targets")}
+        if "frontend" in specs:
+            batch_abs["frontend"] = specs["frontend"]
+            batch_sh["frontend"] = in_sh["frontend"]
+        lowered = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, batch_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        ).lower(p_abs, o_abs, batch_abs)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        args = [p_abs, specs["tokens"]]
+        shards = [p_sh, in_sh["tokens"]]
+        if "frontend" in specs:
+            args.append(specs["frontend"])
+            shards.append(in_sh["frontend"])
+        # prefill returns (last_logits, cache): pin the cache's output
+        # sharding to the layout the decode cells consume
+        pf_abs = jax.eval_shape(step, *args)
+        pf_cache_ax = jax.tree.map(lambda _: None, pf_abs[1])
+        pf_cache_ax["pos"] = ("batch",)
+        _, dec_ax = cache_shapes(cfg, shape.global_batch, shape.seq_len,
+                                 cfg.dtype)
+        pf_cache_ax["groups"] = dec_ax["groups"]
+        cache_out_sh = sh.tree_shardings(mesh, pf_cache_ax, pf_abs[1])
+        logits_sh = jax.sharding.NamedSharding(
+            mesh, sh.spec_for(mesh, ("batch", "vocab"), pf_abs[0].shape))
+        lowered = jax.jit(step, in_shardings=tuple(shards),
+                          out_shardings=(logits_sh, cache_out_sh)).lower(*args)
+    else:  # decode
+        step = make_serve_step(cfg)
+        lowered = jax.jit(
+            step,
+            in_shardings=(p_sh, in_sh["cache"], in_sh["tokens"]),
+            out_shardings=(None, in_sh["cache"]),
+            donate_argnums=(1,),
+        ).lower(p_abs, specs["cache"], specs["tokens"])
+
+    meta = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "n_devices": n_dev,
+            "model_flops": roof.analytic_model_flops(cfg, shape, n_dev)}
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             out_dir=None, remat=None, save_hlo: bool = False):
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                   remat=remat)
+        if lowered is None:
+            meta.update({"status": "skipped", "arch": arch,
+                         "shape": shape_name, "multi_pod": multi_pod})
+            print(f"[dryrun] {arch} x {shape_name} "
+                  f"({'multi' if multi_pod else 'single'}): SKIP ({meta['skip']})")
+            if out_dir:
+                out = Path(out_dir)
+                out.mkdir(parents=True, exist_ok=True)
+                name = f"{arch}_{shape_name}{'_mp' if multi_pod else ''}.json"
+                (out / name).write_text(json.dumps(meta, indent=1,
+                                                   default=str))
+            return meta
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        rl = roof.from_compiled(compiled, hlo_text=hlo,
+                                model_flops=meta["model_flops"])
+        meta.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            },
+            "roofline": rl.as_dict(),
+        })
+        hbm_total = sum(v for v in meta["memory"].values() if v) - (
+            meta["memory"]["alias_bytes"] or 0)
+        meta["memory"]["per_device_total_gib"] = round(hbm_total / 2**30, 3)
+        print(f"[dryrun] {arch} x {shape_name} "
+              f"({'multi' if multi_pod else 'single'}): OK "
+              f"compile={t_compile:.0f}s mem={hbm_total/2**30:.2f}GiB "
+              f"bottleneck={rl.bottleneck} "
+              f"t_step>={rl.step_time_s*1e3:.1f}ms "
+              f"useful={rl.useful_flops_fraction:.2f}")
+        if save_hlo and out_dir:
+            import gzip
+            with gzip.open(Path(out_dir) / f"{arch}_{shape_name}"
+                           f"{'_mp' if multi_pod else ''}.hlo.gz", "wt") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 -- record failures as results
+        meta = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+        print(f"[dryrun] {arch} x {shape_name}: ERROR {e}")
+    meta["wall_s"] = round(time.time() - t0, 1)
+    if out_dir:
+        out = Path(out_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        name = f"{arch}_{shape_name}{'_mp' if multi_pod else ''}.json"
+        (out / name).write_text(json.dumps(meta, indent=1, default=str))
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCHS if (args.all or args.arch in (None, "all")) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape in (None, "all")) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+    results = [run_cell(a, s, multi_pod=mp, out_dir=args.out,
+                        remat=args.remat, save_hlo=args.save_hlo)
+               for a, s, mp in cells]
+    ok = sum(r.get("status") == "ok" for r in results)
+    skip = sum(r.get("status") == "skipped" for r in results)
+    err = sum(r.get("status") == "error" for r in results)
+    print(f"[dryrun] done: {ok} ok, {skip} skipped, {err} errors")
+    return 1 if err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

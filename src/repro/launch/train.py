@@ -1,0 +1,46 @@
+"""Training launcher: `python -m repro.launch.train --arch <id> [--smoke]`.
+
+On this CPU container it runs the reduced (smoke) config of the chosen
+architecture through the fault-tolerant trainer on the host mesh; on a real
+pod the same entry point takes the full config, the production mesh, and
+per-host data shards (the pjit step is identical to what the dry-run
+compiles for 256/512 devices).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.registry import ARCHS, get_config, get_smoke_config
+from repro.data.pipeline import DataConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_12b", choices=ARCHS)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (needs a real pod); default: smoke")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    tcfg = TrainerConfig(steps=args.steps, ckpt_every=max(args.steps // 2, 10),
+                         log_every=5, ckpt_dir=args.ckpt_dir)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                      global_batch=args.global_batch)
+    tr = Trainer(cfg, tcfg, dcfg)
+    tr.install_preemption_handler()
+    out = tr.run()
+    print(f"[launch.train] {cfg.name}: done at step {out['step']}, "
+          f"final loss {out['history'][-1]['loss']:.4f}, "
+          f"stragglers {len(out['straggler_events'])}")
+
+
+if __name__ == "__main__":
+    main()

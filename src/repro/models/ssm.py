@@ -1,0 +1,244 @@
+"""Attention-free mixers: Mamba2 (SSD, scalar per-head decay) and RWKV-6
+(Finch: token shift + data-dependent vector decay + bonus).
+
+Decode caches:
+  mamba2: {"conv": (B, d_conv-1, d_inner+2*d_state), "ssm": (B, nh, ds, hd)}
+  rwkv6:  {"state": (B, H, dk, dv), "tm_shift": (B, D), "cm_shift": (B, D)}
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.models.layers import Spec, rms_norm
+
+
+def _st_read(arr, idx):
+    if idx is None:
+        return arr
+    return jax.lax.dynamic_index_in_dim(arr, idx, 0, keepdims=False)
+
+
+def _st_write(arr, idx, val):
+    val = val.astype(arr.dtype)
+    if idx is None:
+        return val
+    return jax.lax.dynamic_update_index_in_dim(arr, val, idx, 0)
+
+# ============================================================================
+# Mamba2
+# ============================================================================
+
+
+def mamba2_dims(cfg: ArchConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    nh = d_inner // ssm.head_dim
+    return d_inner, nh, ssm.d_state, ssm.d_conv
+
+
+def mamba2_specs(cfg: ArchConfig) -> Dict[str, Spec]:
+    D = cfg.d_model
+    d_inner, nh, ds, dc = mamba2_dims(cfg)
+    conv_ch = d_inner + 2 * ds
+    return {
+        "in_proj": Spec((D, 2 * d_inner + 2 * ds + nh), ("embed", "mlp")),
+        "conv_w": Spec((dc, conv_ch), ("conv", "mlp"), "normal", 0.5),
+        "conv_b": Spec((conv_ch,), ("mlp",), "zeros"),
+        "A_log": Spec((nh,), ("heads",), "zeros"),
+        "D_skip": Spec((nh,), ("heads",), "ones"),
+        "dt_bias": Spec((nh,), ("heads",), "zeros"),
+        "gate_norm": Spec((d_inner,), ("mlp",), "zeros"),
+        "out_proj": Spec((d_inner, D), ("mlp", "embed")),
+    }
+
+
+def _mamba2_split(cfg, zxbcdt):
+    d_inner, nh, ds, _ = mamba2_dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner: 2 * d_inner + 2 * ds]
+    dt = zxbcdt[..., 2 * d_inner + 2 * ds:]
+    return z, xbc, dt
+
+
+def apply_mamba2(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                          # (B,S,D) normed
+    *,
+    cfg: ArchConfig,
+    mode: str,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    layer_idx=None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    B, S, D = x.shape
+    d_inner, nh, ds, dc = mamba2_dims(cfg)
+    hd = cfg.ssm.head_dim
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _mamba2_split(cfg, zxbcdt)
+
+    if mode == "decode":
+        conv_state = _st_read(cache["conv"], layer_idx)  # (B, dc-1, ch)
+        win = jnp.concatenate([conv_state, xbc], axis=1)  # (B, dc, ch)
+        xbc_conv = jnp.einsum("btc,tc->bc", win, p["conv_w"]) + p["conv_b"]
+        xbc_conv = jax.nn.silu(xbc_conv)[:, None]        # (B,1,ch)
+        new_conv = win[:, 1:]
+    else:
+        xbc_pad = jnp.pad(xbc, ((0, 0), (dc - 1, 0), (0, 0)))
+        # causal depthwise conv, width dc
+        xbc_conv = sum(
+            xbc_pad[:, i: i + S] * p["conv_w"][i][None, None]
+            for i in range(dc)) + p["conv_b"]
+        xbc_conv = jax.nn.silu(xbc_conv)
+        # prefill carries the last dc-1 raw (pre-activation) inputs
+        new_conv = xbc[:, S - (dc - 1):] if mode == "prefill" else None
+
+    xs = xbc_conv[..., :d_inner].reshape(B, -1, nh, hd)
+    Bmat = xbc_conv[..., d_inner: d_inner + ds]          # (B,T,ds) single group
+    Cmat = xbc_conv[..., d_inner + ds:]                  # (B,T,ds)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    log_decay = (-jnp.exp(p["A_log"].astype(jnp.float32))[None, None] * dt)  # (B,T,nh)
+
+    qk_B = jnp.broadcast_to(Bmat[:, :, None], (B, Bmat.shape[1], nh, ds))
+    qk_C = jnp.broadcast_to(Cmat[:, :, None], (B, Cmat.shape[1], nh, ds))
+    vv = xs * dt[..., None].astype(xs.dtype)
+
+    if mode == "decode":
+        out, new_state = kops.linear_scan_step(
+            qk_C[:, 0], qk_B[:, 0], vv[:, 0], log_decay[:, 0],
+            _st_read(cache["ssm"], layer_idx))
+        y = out[:, None]                                 # (B,1,nh,hd)
+        new_cache = {"conv": _st_write(cache["conv"], layer_idx, new_conv),
+                     "ssm": _st_write(cache["ssm"], layer_idx, new_state)}
+    else:
+        out, final_state = kops.linear_scan(qk_C, qk_B, vv, log_decay)
+        y = out
+        new_cache = ({"conv": new_conv, "ssm": final_state}
+                     if mode == "prefill" else None)
+
+    y = y + p["D_skip"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(B, -1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], new_cache
+
+
+# ============================================================================
+# RWKV-6 (time mix + channel mix fused into one block)
+# ============================================================================
+
+
+def rwkv6_dims(cfg: ArchConfig):
+    hd = cfg.ssm.head_dim if cfg.ssm else 64
+    return cfg.d_model // hd, hd
+
+
+def rwkv6_specs(cfg: ArchConfig) -> Dict[str, Spec]:
+    D, dff = cfg.d_model, cfg.d_ff
+    H, hd = rwkv6_dims(cfg)
+    lora = 64
+    return {
+        # time mix
+        "mu_r": Spec((D,), ("embed",), "zeros"),
+        "mu_k": Spec((D,), ("embed",), "zeros"),
+        "mu_v": Spec((D,), ("embed",), "zeros"),
+        "mu_g": Spec((D,), ("embed",), "zeros"),
+        "mu_w": Spec((D,), ("embed",), "zeros"),
+        "wr": Spec((D, D), ("embed", "heads_embed")),
+        "wk": Spec((D, D), ("embed", "heads_embed")),
+        "wv": Spec((D, D), ("embed", "heads_embed")),
+        "wg": Spec((D, D), ("embed", "heads_embed")),
+        "w0": Spec((D,), ("heads_embed",), "zeros"),
+        "wA": Spec((D, lora), ("embed", "lora")),
+        "wB": Spec((lora, D), ("lora", "heads_embed")),
+        "u": Spec((H, hd), ("heads", "head_dim")),
+        "ln_x": Spec((D,), ("heads_embed",), "zeros"),
+        "wo": Spec((D, D), ("heads_embed", "embed")),
+        # channel mix
+        "cm_mu_k": Spec((D,), ("embed",), "zeros"),
+        "cm_mu_r": Spec((D,), ("embed",), "zeros"),
+        "cm_norm": Spec((D,), ("embed",), "zeros"),
+        "cm_wk": Spec((D, dff), ("embed", "mlp")),
+        "cm_wv": Spec((dff, D), ("mlp", "embed")),
+        "cm_wr": Spec((D, D), ("embed", "embed_out")),
+    }
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def apply_rwkv6(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                         # (B,S,D) normed (time-mix input)
+    x_cm: jnp.ndarray,                      # (B,S,D) channel-mix normed input fn applied later
+    *,
+    cfg: ArchConfig,
+    mode: str,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    layer_idx=None,
+):
+    """Returns (tm_out, cm_fn, new_cache); cm_fn applies channel mix to its
+    (re-normed) input so the block can put the residual in between."""
+    B, S, D = x.shape
+    H, hd = rwkv6_dims(cfg)
+
+    if mode == "decode":
+        xs = _st_read(cache["tm_shift"], layer_idx)[:, None]   # previous token
+    else:
+        xs = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :S]
+    r = _lerp(x, xs, p["mu_r"]) @ p["wr"]
+    k = _lerp(x, xs, p["mu_k"]) @ p["wk"]
+    v = _lerp(x, xs, p["mu_v"]) @ p["wv"]
+    g = _lerp(x, xs, p["mu_g"]) @ p["wg"]
+    xw = _lerp(x, xs, p["mu_w"])
+    w_exp = (p["w0"].astype(jnp.float32)[None, None]
+             + jnp.tanh(xw.astype(jnp.float32) @ p["wA"].astype(jnp.float32))
+             @ p["wB"].astype(jnp.float32))
+    # clamp: decay below e^-12/step is numerically zero anyway, and bounded
+    # log-decays keep the chunked (factored) scan well-conditioned
+    w_log = -jnp.exp(jnp.clip(w_exp, -8.0, 2.4849))      # (B,S,D), >= -12
+
+    rh = r.reshape(B, S, H, hd)
+    kh = k.reshape(B, S, H, hd)
+    vh = v.reshape(B, S, H, hd)
+    wh = w_log.reshape(B, S, H, hd)
+
+    if mode == "decode":
+        out, new_state = kops.linear_scan_step(
+            rh[:, 0], kh[:, 0], vh[:, 0], wh[:, 0],
+            _st_read(cache["state"], layer_idx), p["u"])
+        y = out[:, None]
+        tm_shift = x[:, 0]
+    else:
+        out, final_state = kops.linear_scan(rh, kh, vh, wh, bonus=p["u"], chunk=32)
+        y = out
+        new_state = final_state
+        tm_shift = x[:, -1]
+    # per-head group norm then gate
+    y = y.reshape(B, -1, H, hd)
+    y = rms_norm(y, jnp.zeros((hd,), y.dtype), cfg.norm_eps)
+    y = y.reshape(B, -1, D) * (1.0 + p["ln_x"].astype(y.dtype))[None, None]
+    tm_out = (y * jax.nn.silu(g)) @ p["wo"]
+
+    def cm_fn(xc):
+        if mode == "decode":
+            xcs = _st_read(cache["cm_shift"], layer_idx)[:, None]
+        else:
+            xcs = jnp.pad(xc, ((0, 0), (1, 0), (0, 0)))[:, : xc.shape[1]]
+        kk = jax.nn.relu(_lerp(xc, xcs, p["cm_mu_k"]) @ p["cm_wk"]) ** 2
+        rr = jax.nn.sigmoid(_lerp(xc, xcs, p["cm_mu_r"]) @ p["cm_wr"])
+        return rr * (kk @ p["cm_wv"]), xc[:, -1]
+
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"state": new_state, "tm_shift": tm_shift}
+    elif mode == "decode":
+        new_cache = {"state": _st_write(cache["state"], layer_idx, new_state),
+                     "tm_shift": _st_write(cache["tm_shift"], layer_idx,
+                                           tm_shift)}
+    return tm_out, cm_fn, new_cache

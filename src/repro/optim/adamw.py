@@ -1,0 +1,76 @@
+"""AdamW built from scratch (no optax in this environment): fp32 moments,
+decoupled weight decay, global-norm clipping, schedule as a step function."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(z, params),
+                      v=jax.tree.map(z, params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(
+    grads, state: AdamWState, params, *,
+    lr: Callable[[jnp.ndarray], jnp.ndarray],
+    b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+    weight_decay: float = 0.1, clip_norm: float = 1.0,
+):
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr_t = lr(step)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        mhat = m_new / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v_new / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr_t * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), {
+        "grad_norm": gnorm, "lr": lr_t}
+
+
+def cosine_schedule(peak_lr: float = 3e-4, warmup: int = 200,
+                    total: int = 10_000, floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(1, warmup)
+        frac = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def opt_state_axes(params_axes) -> Any:
+    """Optimizer-state logical axes mirror the parameter axes."""
+    return AdamWState(step=(), m=params_axes, v=params_axes)

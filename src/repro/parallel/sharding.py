@@ -1,0 +1,180 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style), with per-tensor
+conflict resolution and divisibility fallback.
+
+Production layout (DESIGN.md §5): FSDP over ``data`` (+``pod``), tensor/
+expert parallelism over ``model``.  A logical dim is dropped to replicated
+when (a) its mesh axis is already taken by an earlier dim of the same tensor
+or (b) the dim size does not divide the axis size (e.g. whisper's 12 heads
+on a 16-way model axis).  long_500k's sequence sharding (SP) falls out of
+rule order: batch=1 fails divisibility, so ``kv_seq`` claims ``data``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> candidate mesh targets, tried in order
+# ("fsdp" resolves to ("pod","data"))
+RULES: Dict[str, Any] = {
+    "vocab": ["model"],
+    "embed": ["fsdp"],
+    "heads": ["model"],
+    "kv_heads": ["model"],
+    "heads_embed": ["model"],
+    "mlp": ["model"],
+    "mlp_state": ["model"],
+    "experts": ["model"],
+    "experts_router": [],
+    "q_lora": [],
+    "kv_lora": [],
+    "head_dim": [],
+    "layers": [],
+    "conv": [],
+    "lora": [],
+    "seq": [],
+    "embed2": ["fsdp"],
+    "embed_out": [],
+    # activations / caches
+    "batch": ["fsdp"],
+    # sequence dim of KV caches: claims whatever primary consumers left free
+    # -- "fsdp" when batch=1 (long_500k SP), "model" when kv_heads doesn't
+    # divide the model axis (e.g. stablelm kv=8 on TP16: seq-sharded cache
+    # with a psum'd partial softmax instead of a replicated 850 GB cache)
+    "kv_seq": ["fsdp", "model"],
+}
+
+# assignment priority: primary consumers claim axes before fallbacks
+_PRIORITY = {
+    "vocab": 0, "heads": 0, "kv_heads": 0, "heads_embed": 0, "mlp": 0,
+    "mlp_state": 0, "experts": 0,
+    "embed": 1, "embed2": 1, "batch": 1,
+    "kv_seq": 9,
+}
+
+
+def _mesh_axes(mesh: Mesh, target) -> Tuple[str, ...]:
+    if target is None:
+        return ()
+    if isinstance(target, (list, tuple)):
+        # legacy list form passed directly
+        for t in target:
+            axes = _mesh_axes(mesh, t)
+            if axes:
+                return axes
+        return ()
+    if target == "fsdp":
+        return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return (target,) if target in mesh.axis_names else ()
+
+
+def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def spec_for(mesh: Mesh, dims: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+    """Resolve one tensor's logical dims to a PartitionSpec.
+
+    Dims are assigned in _PRIORITY order (not positional order) so fallback
+    consumers like kv_seq only claim axes the primary consumers left free;
+    a dim is dropped to replicated when its size doesn't divide the axis."""
+    taken = set()
+    out: list = [None] * len(dims)
+    order = sorted(range(len(dims)),
+                   key=lambda i: (_PRIORITY.get(dims[i], 5), i))
+    for i in order:
+        d = dims[i]
+        candidates = RULES.get(d, []) if d is not None else []
+        for target in candidates:
+            axes = _mesh_axes(mesh, target)
+            axes = tuple(a for a in axes if a not in taken)
+            if not axes:
+                continue
+            if shape is not None and shape[i] % _axis_size(mesh, axes) != 0:
+                # try the suffix (just "data" of ("pod","data")), else next
+                if (len(axes) > 1
+                        and shape[i] % _axis_size(mesh, axes[-1:]) == 0):
+                    axes = axes[-1:]
+                else:
+                    continue
+            taken.update(axes)
+            out[i] = axes[0] if len(axes) == 1 else tuple(axes)
+            break
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+_CURRENT_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    """Install the mesh used by in-model activation sharding constraints.
+    Called by the dry-run / trainer / server before tracing; None disables
+    constraints (single-device tests and examples)."""
+    global _CURRENT_MESH
+    _CURRENT_MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _CURRENT_MESH
+
+
+def constrain(x, dims: Sequence[Optional[str]]):
+    """with_sharding_constraint via logical dims; no-op without a mesh.
+
+    Keeping the residual stream pinned to (batch=data, ...) stops GSPMD from
+    'optimizing' FSDP matmuls into batch-replicated partial sums (observed:
+    a 200 GiB logits all-reduce on whisper before this constraint existed).
+    """
+    if _CURRENT_MESH is None:
+        return x
+    spec = spec_for(_CURRENT_MESH, dims, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CURRENT_MESH, spec))
+
+
+def tree_shardings(mesh: Mesh, axes_tree, shapes_tree=None):
+    """axes tree (+ matching ShapeDtypeStruct tree) -> NamedSharding tree."""
+    def is_axes_leaf(x):
+        return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                            for e in x)
+
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda a: NamedSharding(mesh, spec_for(mesh, a)),
+            axes_tree, is_leaf=is_axes_leaf)
+    return jax.tree.map(
+        lambda a, s: NamedSharding(mesh, spec_for(mesh, a, s.shape)),
+        axes_tree, shapes_tree, is_leaf=is_axes_leaf)
+
+
+def batch_sharding(mesh: Mesh, ndim: int = 2) -> NamedSharding:
+    """tokens/targets: batch over (pod, data)."""
+    fsdp = _mesh_axes(mesh, "fsdp")
+    spec = P(fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None))
+    return NamedSharding(mesh, spec)
+
+
+def input_shardings(mesh: Mesh, specs: Dict[str, Any], cache_axes=None):
+    """Shardings for the input_specs() dict of one dry-run cell."""
+    out: Dict[str, Any] = {}
+    for name, v in specs.items():
+        if name in ("tokens", "targets"):
+            out[name] = NamedSharding(
+                mesh, spec_for(mesh, ("batch",) + (None,) * (len(v.shape) - 1),
+                               v.shape))
+        elif name == "frontend":
+            out[name] = NamedSharding(
+                mesh, spec_for(mesh, ("batch", None, None), v.shape))
+        elif name == "cache":
+            assert cache_axes is not None
+            out[name] = tree_shardings(mesh, cache_axes, v)
+        else:
+            raise KeyError(name)
+    return out

@@ -1,0 +1,258 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute  = HLO_FLOPs_per_device / peak_FLOPs          (197 TFLOP/s bf16, v5e)
+memory   = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+collective = wire_bytes_per_device / ICI_link_bw      (~50 GB/s/link)
+
+cost_analysis() provides FLOPs/bytes of the per-device SPMD module.
+Collective bytes are NOT in cost_analysis: we parse the optimized HLO and sum
+effective ring-transfer bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 MXU, TPU v5e
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (effective)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_TUPLE_COLL_RE = re.compile(
+    r"=\s+\(([^)]*)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0                       # effective per-device bytes
+    by_kind: Dict[str, float] = field(default_factory=dict)
+    count: int = 0
+
+    def add(self, kind: str, b: float):
+        self.wire_bytes += b
+        self.by_kind[kind] = self.by_kind.get(kind, 0.0) + b
+        self.count += 1
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Effective ring-transfer bytes per device, from optimized (SPMD,
+    per-device) HLO text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if ("all-reduce" not in line and "all-gather" not in line
+                and "reduce-scatter" not in line and "all-to-all" not in line
+                and "collective-permute" not in line):
+            continue
+        if "-done" in line or "fusion" in line.split("=")[0]:
+            continue
+        kind = None
+        sizes: List[int] = []
+        m = _COLL_RE.search(line)
+        if m:
+            kind = m.group(3)
+            sizes = [_shape_bytes(m.group(1), m.group(2))]
+        else:
+            mt = _TUPLE_COLL_RE.search(line)
+            if not mt:
+                continue
+            kind = mt.group(2)
+            sizes = [_shape_bytes(d, dims)
+                     for d, dims in _SHAPE_RE.findall(mt.group(1))]
+        n = max(2, _group_size(line))
+        total = float(sum(sizes))
+        if kind == "all-reduce":
+            b = 2.0 * total * (n - 1) / n
+        elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+            b = total * (n - 1) / n
+        else:  # collective-permute: one hop
+            b = total
+        stats.add(kind, b)
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float              # semantic traffic (see hlo_stats)
+    coll: CollectiveStats
+    model_flops: float = 0.0      # 6*N*D (analytic, per device)
+    hbm_bytes_raw: float = 0.0    # incl. CPU-lowering movement artifacts
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll.wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline lower bound (perfect overlap): max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "hbm_bytes_raw_per_device": self.hbm_bytes_raw,
+            "collective_bytes_per_device": self.coll.wire_bytes,
+            "collective_by_kind": self.coll.by_kind,
+            "collective_count": self.coll.count,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_lower_bound_s": self.step_time_s,
+            "model_flops_per_device": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+        }
+
+
+def from_compiled(compiled, hlo_text: Optional[str] = None,
+                  model_flops: float = 0.0) -> Roofline:
+    """Loop-aware terms from roofline/hlo_stats.py (cost_analysis counts
+    while bodies once -- observed 60x flop undercount on deep stacks)."""
+    from repro.roofline import hlo_stats
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    st = hlo_stats.analyze(text)
+    coll = CollectiveStats(wire_bytes=st.coll_bytes, by_kind=st.coll_by_kind,
+                           count=st.coll_count)
+    return Roofline(flops=st.flops, hbm_bytes=st.hbm_bytes_semantic,
+                    coll=coll, model_flops=model_flops,
+                    hbm_bytes_raw=st.hbm_bytes)
+
+
+def analytic_model_flops(cfg, shape, n_devices: int) -> float:
+    """Analytic 'useful' FLOPs per device: 2*params*tokens forward
+    (x3 for train = fwd+bwd), counting only active experts, the encoder at
+    its own token count, and the LM head at the positions actually computed.
+    """
+    import jax as _jax
+
+    from repro.models.model import build_specs
+
+    specs = build_specs(cfg)
+
+    def count(tree):
+        leaves = _jax.tree.leaves(tree, is_leaf=lambda x: hasattr(x, "shape"))
+        total = 0
+        for x in leaves:
+            n = 1
+            for d in x.shape:
+                n *= d
+            total += n
+        return total
+
+    body = count(specs["groups"])
+    if "shared_attn" in specs:
+        sa = count(specs["shared_attn"])
+        n_apps = sum(g.repeats for g in cfg.groups
+                     for ls in g.pattern if ls.shared_attn)
+        body += sa * n_apps
+    if cfg.moe is not None:
+        from repro.models.moe import moe_specs
+        m = cfg.moe
+        per_layer = sum(count(s) for k, s in moe_specs(cfg).items()
+                        if k in ("wi_gate", "wi_up", "wo"))
+        n_moe = sum(g.repeats for g in cfg.groups
+                    for ls in g.pattern if ls.mlp == "moe")
+        body -= per_layer * n_moe * (1 - m.top_k / m.n_experts)
+
+    B = shape.global_batch
+    tokens = B * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    flops = mult * body * tokens
+
+    # attention score+value flops (the analytic includes the KV-cache work,
+    # otherwise decode cells would read as ~0% useful)
+    S = shape.seq_len
+    hd = cfg.head_dim_
+    for g in cfg.groups:
+        for ls in g.pattern:
+            kinds = []
+            if ls.mixer == "attn":
+                kinds.append(ls.attn_kind)
+            if ls.shared_attn:
+                kinds.append("full")
+            for kind in kinds:
+                if kind == "mla":
+                    qk = cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+                    vd = cfg.mla.v_head_dim
+                else:
+                    qk = vd = hd
+                if kind == "cross":
+                    kv_len_eff = cfg.n_frontend_tokens
+                    q_tokens = tokens
+                elif shape.kind == "decode":
+                    kv_len_eff = min(S, cfg.window) if kind == "local" else S
+                    q_tokens = B
+                else:  # causal full-seq: average kv length = S/2 (or window)
+                    kv_len_eff = min(S, cfg.window) if kind == "local" else S / 2
+                    q_tokens = tokens
+                # fwd = qk-matmul + pv-matmul = 2*q*kv*H*(qk+vd); train x3
+                per_layer = 2 * q_tokens * kv_len_eff * cfg.n_heads * (qk + vd)
+                flops += (mult / 2) * per_layer * g.repeats
+
+    if cfg.encoder_groups and shape.kind != "decode":
+        enc = count(specs["encoder"]["groups"])
+        flops += mult * enc * B * cfg.n_frontend_tokens
+        for g in cfg.encoder_groups:
+            flops += ((mult / 2) * g.repeats * 2 * B
+                      * cfg.n_frontend_tokens ** 2 * cfg.n_heads * 2 * hd)
+
+    head = cfg.d_model * cfg.vocab_padded
+    head_tokens = tokens if shape.kind == "train" else B
+    flops += mult * head * head_tokens
+    if cfg.mtp and shape.kind == "train":
+        flops += mult * (count(specs["mtp"]) + head) * tokens
+    return flops / n_devices

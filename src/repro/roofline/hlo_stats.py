@@ -1,0 +1,375 @@
+"""Loop-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE, so scanned
+layer stacks (and chunked attention loops) under-report FLOPs, HBM traffic
+and collective bytes by the trip count (observed: 60x on a 40-layer model).
+This module re-derives the three roofline inputs from the optimized HLO
+text, propagating multipliers through the call graph:
+
+  * while ops carry ``backend_config={"known_trip_count":{"n":...}}``;
+  * fusion/call/conditional bodies inherit the caller's multiplier;
+  * FLOPs: every ``dot`` (2 * result_elems * contracted_elems), descending
+    into fusion computations (the MXU work is real wherever it lives);
+  * HBM bytes: operand+result bytes at fusion granularity (fusion internals
+    stay in registers/VMEM);
+  * collective bytes: ring-transfer formulas per kind, times multiplier.
+
+Operands are printed without shapes in optimized HLO, so a per-computation
+symbol table (op name -> shape) is built first.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE = re.compile(r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|s4|"
+                    r"u64|u32|u16|u8|u4|pred|c64|c128)\[([0-9,]*)\]")
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPND = re.compile(r"%([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)')
+_GROUPS_BRACE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(shapes: List[Tuple[str, str]]) -> float:
+    return float(sum(_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+                     for dt, dims in shapes))
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    # excludes pure data-movement ops (copy / convert / transpose-only
+    # fusions): the TPU backend aliases while-carry buffers in place and
+    # consumes bf16 dot operands directly, so those CPU-lowering copies
+    # do not exist on the target (EXPERIMENTS.md methodology)
+    hbm_bytes_semantic: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    coll_count: int = 0
+    n_while: int = 0
+    dots: int = 0
+    # optional profile: (bytes|flops|coll, description) heaviest lines
+    top: List[Tuple[float, str, str]] = field(default_factory=list)
+
+    def add_top(self, val: float, kind: str, desc: str, keep: int = 40):
+        self.top.append((val, kind, desc))
+        if len(self.top) > 4 * keep:
+            self.top.sort(reverse=True)
+            del self.top[keep:]
+
+
+class _Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.lines: List[str] = []
+        # op name -> list of (dtype, dims) (tuples have several)
+        self.shapes: Dict[str, List[Tuple[str, str]]] = {}
+
+    def finish(self):
+        for line in self.lines:
+            m = _DEF.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            lhs_types = rhs.split("(", 1)[0] if not rhs.startswith("(") else \
+                rhs[: rhs.index(")") + 1]
+            # result type is everything before the op name; for tuple results
+            # it's the leading parenthesized list
+            if rhs.startswith("("):
+                end = rhs.index(")")
+                type_str = rhs[: end + 1]
+            else:
+                type_str = rhs.split(" ", 1)[0]
+            self.shapes[m.group(1)] = _SHAPE.findall(type_str)
+
+
+def _split(text: str) -> Tuple[Dict[str, _Computation], str]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    entry = None
+    for raw in text.splitlines():
+        s = raw.strip()
+        if cur is None:
+            if s.endswith("{") and "->" in s and "(" in s:
+                m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)", s)
+                if m:
+                    cur = _Computation(m.group(2))
+                    comps[cur.name] = cur
+                    if m.group(1):
+                        entry = cur.name
+        else:
+            if s == "}":
+                cur.finish()
+                cur = None
+            else:
+                cur.lines.append(s)
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+_SKIP_BYTES_OPS = (
+    " parameter(", " constant(", " tuple(", " get-tuple-element(",
+    " bitcast(", " after-all(", " partition-id(", " iota(", " copy-start(",
+    " copy-done(",
+    # control flow moves no data itself; its body ops are counted separately
+    " while(", " conditional(", " call(",
+)
+
+
+def analyze(text: str) -> HloStats:
+    comps, entry = _split(text)
+    stats = HloStats()
+
+    def operand_names(rhs: str) -> List[str]:
+        if "(" not in rhs:
+            return []
+        inner = rhs.split("(", 1)[1]
+        inner = inner.split(")", 1)[0] if ")" in inner else inner
+        return _OPND.findall(inner)
+
+    def op_shapes(comp: _Computation, rhs: str) -> List[Tuple[str, str]]:
+        """shapes of all operands referenced inside the op's parens."""
+        out: List[Tuple[str, str]] = []
+        for name in operand_names(rhs):
+            sh = comp.shapes.get(name)
+            if sh:
+                out.extend(sh)
+        return out
+
+    _MOVE_OPS = (" convert(", " copy(", " transpose(", " bitcast(",
+                 " reshape(", " parameter(", " constant(",
+                 " get-tuple-element(", " tuple(", " dynamic-update-slice(",
+                 " dynamic-slice(", " bitcast-convert(")
+
+    def movement_only(callee: Optional[str]) -> bool:
+        fc = comps.get(callee) if callee else None
+        if fc is None:
+            return False
+        for fl in fc.lines:
+            if not any(op in fl for op in _MOVE_OPS):
+                return False
+        return True
+
+    def dus_fusion_bytes(callee: Optional[str]) -> Optional[float]:
+        """A fusion whose ROOT is dynamic-update-slice writes only the
+        update region in place (XLA guarantees in-place DUS for while-carry
+        buffers): traffic = 2x update operand, not the whole destination."""
+        fc = comps.get(callee) if callee else None
+        if fc is None:
+            return None
+        root = None
+        for fl in fc.lines:
+            if fl.startswith("ROOT "):
+                root = fl
+        if root is None:
+            return None
+        if " convert(" in root or " bitcast(" in root or " copy(" in root:
+            # look through a movement-rooted chain to the DUS
+            names0 = _OPND.findall(root.split("(", 1)[1])
+            tgt = names0[0] if names0 else None
+            root = next((fl for fl in fc.lines
+                         if _DEF.match(fl)
+                         and _DEF.match(fl).group(1) == tgt), root)
+        if " dynamic-update-slice(" not in root:
+            return None
+        names = _OPND.findall(root.split("(", 1)[1])
+        if len(names) < 2:
+            return None
+        upd = fc.shapes.get(names[1], [])
+        return 2.0 * _shapes_bytes(upd)
+
+    def fusion_operand_bytes(comp: _Computation, rhs: str,
+                             callee: Optional[str]) -> float:
+        """Traffic of a fusion's operands: a parameter consumed only by
+        dynamic-slice/gather inside the fusion reads just the slice, not the
+        full (possibly layer-stacked) array."""
+        names = operand_names(rhs)
+        fc = comps.get(callee) if callee else None
+        if fc is None:
+            return _shapes_bytes(op_shapes(comp, rhs))
+        # map parameter index -> param op name inside the fusion
+        param_names = {}
+        for fl in fc.lines:
+            mm = _DEF.match(fl)
+            if mm and " parameter(" in fl:
+                idx = int(fl.rsplit("parameter(", 1)[1].split(")")[0])
+                param_names[idx] = mm.group(1)
+        total = 0.0
+        for i, nm in enumerate(names):
+            sh = comp.shapes.get(nm)
+            if not sh:
+                continue
+            pname = param_names.get(i)
+            slice_bytes = None
+            if pname is not None:
+                uses = [fl for fl in fc.lines
+                        if re.search(rf"%{re.escape(pname)}\b",
+                                     fl.split("=", 1)[-1])]
+                if uses and all(" dynamic-slice(" in u or " gather(" in u
+                                for u in uses):
+                    slice_bytes = 0.0
+                    for u in uses:
+                        um = _DEF.match(u)
+                        if um:
+                            slice_bytes += _shapes_bytes(
+                                fc.shapes.get(um.group(1), []))
+            total += slice_bytes if slice_bytes is not None else \
+                _shapes_bytes(sh)
+        return total
+
+    def visit(name: str, mult: float, in_fusion: bool):
+        comp = comps.get(name)
+        if comp is None or mult <= 0:
+            return
+        for line in comp.lines:
+            m = _DEF.match(line)
+            rhs = m.group(2) if m else line
+            res_name = m.group(1) if m else None
+
+            if " dot(" in f" {rhs}" or rhs.startswith("dot("):
+                res = comp.shapes.get(res_name, [])
+                res_elems = _elems(res[0][1]) if res else 0
+                inner = rhs.split("dot(", 1)[1]
+                lhs_name_m = _OPND.search(inner)
+                contract = 1
+                if lhs_name_m:
+                    lhs_sh = comp.shapes.get(lhs_name_m.group(1))
+                    mc = _CONTRACT.search(line)
+                    if lhs_sh and mc:
+                        dims = [int(x) for x in mc.group(1).split(",")
+                                if x.strip()]
+                        lhs_dims = [int(x) for x in lhs_sh[0][1].split(",")
+                                    if x.strip()]
+                        for d in dims:
+                            if d < len(lhs_dims):
+                                contract *= lhs_dims[d]
+                f = mult * 2.0 * res_elems * contract
+                stats.flops += f
+                stats.dots += 1
+                stats.add_top(f, "flops", f"x{mult:g} {line[:170]}")
+
+            kind = next((k for k in _COLLECTIVES
+                         if f" {k}(" in line or f" {k}-start(" in line), None)
+            if kind and "-done" not in rhs.split("(")[0]:
+                res = comp.shapes.get(res_name, [])
+                total = _shapes_bytes(res)
+                n = max(2, _group_size(line))
+                if kind == "all-reduce":
+                    b = 2.0 * total * (n - 1) / n
+                elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+                    b = total * (n - 1) / n
+                else:
+                    b = total
+                stats.coll_bytes += mult * b
+                stats.coll_by_kind[kind] = stats.coll_by_kind.get(kind, 0.0) \
+                    + mult * b
+                stats.coll_count += 1
+                stats.add_top(mult * b, "coll", f"x{mult:g} {line[:170]}")
+
+            if not in_fusion and res_name is not None:
+                if not any(op in line for op in _SKIP_BYTES_OPS):
+                    res_b = _shapes_bytes(comp.shapes.get(res_name, []))
+                    if " dynamic-slice(" in line or " gather(" in line:
+                        b = 2.0 * res_b          # slice read + result
+                    elif " dynamic-update-slice(" in line:
+                        # in-place region update: update operand + write
+                        upd = op_shapes(comp, rhs)[1:2]
+                        b = res_b * 0.0 + 2.0 * _shapes_bytes(upd)
+                    elif " fusion(" in line:
+                        mm = _CALLS.search(line)
+                        callee = mm.group(1) if mm else None
+                        dus_b = dus_fusion_bytes(callee)
+                        if dus_b is not None:
+                            b = dus_b
+                        else:
+                            b = res_b + fusion_operand_bytes(comp, rhs, callee)
+                    else:
+                        b = res_b + _shapes_bytes(op_shapes(comp, rhs))
+                    stats.hbm_bytes += mult * b
+                    semantic = b
+                    if " copy(" in line or " transpose(" in line \
+                            or " convert(" in line:
+                        semantic = 0.0      # pure movement op
+                    elif " fusion(" in line:
+                        mm2 = _CALLS.search(line)
+                        callee2 = mm2.group(1) if mm2 else None
+                        if dus_fusion_bytes(callee2) is not None:
+                            semantic = b    # already update-only accounting
+                        elif movement_only(callee2):
+                            semantic = 0.0
+                    stats.hbm_bytes_semantic += mult * semantic
+                    if b > 1e6:
+                        stats.add_top(mult * b, "bytes", f"x{mult:g} {line[:170]}")
+
+            if " while(" in line:
+                stats.n_while += 1
+                trip = 1
+                mt = _TRIP.search(line)
+                if mt:
+                    trip = int(mt.group(1))
+                mb = _BODY.search(line)
+                if mb:
+                    visit(mb.group(1), mult * trip, in_fusion)
+                mc2 = _COND.search(line)
+                if mc2:
+                    visit(mc2.group(1), mult * (trip + 1), in_fusion)
+            elif " fusion(" in line:
+                mm = _CALLS.search(line)
+                if mm:
+                    visit(mm.group(1), mult, True)
+            elif " call(" in line or " custom-call(" in line:
+                mm = _TO_APPLY.search(line) or _CALLS.search(line)
+                if mm:
+                    visit(mm.group(1), mult, in_fusion)
+            elif " conditional(" in line:
+                mm = _BRANCHES.search(line)
+                if mm:
+                    for b_ in mm.group(1).split(","):
+                        visit(b_.strip().lstrip("%"), mult, in_fusion)
+            elif (" reduce(" in line or " sort(" in line or " scatter(" in line
+                  or " map(" in line or " reduce-window(" in line
+                  or " select-and-scatter(" in line):
+                mm = _TO_APPLY.search(line)
+                if mm:
+                    visit(mm.group(1), mult, True)
+
+    visit(entry, 1.0, False)
+    return stats

@@ -1,0 +1,229 @@
+"""EpochPOP-managed KV-cache block pool -- the paper's technique as a
+first-class feature of the serving runtime (DESIGN.md §2.3).
+
+Actors:
+  * **engines** (readers): per-engine threads building batches out of pool
+    blocks.  An engine announces the global epoch when it starts a step
+    (EBR fast path) and tracks its *live block set* privately -- no
+    per-block refcount traffic on the scheduling hot path (the analogue of
+    HP's fence-per-READ that POP eliminates).
+  * **reclaimer**: frees blocks of finished requests.  Fast path: a block
+    retired in epoch e is freed once every engine has announced an epoch
+    > e.  If the free list is still under pressure afterwards (an engine is
+    stalled mid-step -- the EBR robustness hole), it PINGS all engines;
+    each publishes its live set at the next safe point and bumps its
+    publish counter; the reclaimer then frees everything outside the
+    published union.  No engine ever restarts or blocks on reclamation.
+
+Host adaptation (DESIGN.md §8): CPython cannot deliver POSIX signals to a
+chosen thread, so the ping is a flag checked at engine safe points (step
+boundaries); delivery is bounded because steps are bounded.  The faithful
+async-signal semantics are exercised in core/sim.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set
+
+
+class OutOfBlocks(RuntimeError):
+    pass
+
+
+@dataclass
+class PoolStats:
+    allocated: int = 0
+    freed: int = 0
+    epoch_reclaims: int = 0
+    pop_reclaims: int = 0
+    pings: int = 0
+    publishes: int = 0
+    free_watermark_min: int = 1 << 30
+    retired_peak: int = 0
+
+
+class BlockPool:
+    """Thread-safe paged block pool with EpochPOP reclamation."""
+
+    def __init__(self, num_blocks: int, n_engines: int,
+                 reclaim_threshold: int = 32, pressure_factor: int = 2,
+                 ping_timeout_s: float = 5.0):
+        self.num_blocks = num_blocks
+        self.n_engines = n_engines
+        self.reclaim_threshold = reclaim_threshold
+        self.pressure_factor = pressure_factor
+        self.ping_timeout_s = ping_timeout_s
+
+        self._lock = threading.Lock()
+        self._free: List[int] = list(range(num_blocks))
+        # (block, retire_epoch) pairs not yet freed
+        self._retired: List[tuple] = []
+
+        # EBR state
+        self._epoch = 1
+        self._announced = [1 << 60] * n_engines          # MAX = quiescent
+
+        # POP state (per-engine, SWMR)
+        self._live_published: List[Set[int]] = [set() for _ in range(n_engines)]
+        self._publish_counter = [0] * n_engines
+        self._ping_flags = [threading.Event() for _ in range(n_engines)]
+        # engine-local live sets: engine-owned, read only by that engine's
+        # safe-point publish (the "localReservations" of the paper)
+        self._live_local: List[Set[int]] = [set() for _ in range(n_engines)]
+
+        self.stats = PoolStats()
+
+    # ------------------------------------------------------------------
+    # engine (reader) API
+    # ------------------------------------------------------------------
+
+    def start_step(self, engine: int) -> None:
+        """EBR announce: engine enters a step in the current epoch."""
+        self._announced[engine] = self._epoch
+        self.safepoint(engine)
+
+    def end_step(self, engine: int) -> None:
+        self._announced[engine] = 1 << 60
+        self.safepoint(engine)
+
+    def allocate(self, engine: int, n: int) -> List[int]:
+        """Allocate n blocks into the engine's private live set (no global
+        bookkeeping beyond the free list pop)."""
+        with self._lock:
+            if len(self._free) < n:
+                raise OutOfBlocks(f"need {n}, have {len(self._free)}")
+            blocks = [self._free.pop() for _ in range(n)]
+            self.stats.allocated += n
+            self.stats.free_watermark_min = min(self.stats.free_watermark_min,
+                                                len(self._free))
+        self._live_local[engine].update(blocks)
+        return blocks
+
+    def release_local(self, engine: int, blocks: Sequence[int]) -> None:
+        """Engine stops using blocks it still owns (request handed off or
+        aborted before retire)."""
+        self._live_local[engine].difference_update(blocks)
+
+    def safepoint(self, engine: int) -> None:
+        """Bounded-time ping delivery point: publish-on-ping."""
+        ev = self._ping_flags[engine]
+        if ev.is_set():
+            self._publish(engine)
+            ev.clear()
+
+    def _publish(self, engine: int) -> None:
+        # copy-then-publish: the set swap is atomic under the GIL
+        self._live_published[engine] = set(self._live_local[engine])
+        self._publish_counter[engine] += 1
+        self.stats.publishes += 1
+
+    # ------------------------------------------------------------------
+    # reclaimer API
+    # ------------------------------------------------------------------
+
+    def retire(self, engine: int, blocks: Sequence[int]) -> None:
+        """Blocks of a finished request: logically dead, freed when safe."""
+        self._live_local[engine].difference_update(blocks)
+        with self._lock:
+            e = self._epoch
+            self._retired.extend((b, e) for b in blocks)
+            self.stats.retired_peak = max(self.stats.retired_peak,
+                                          len(self._retired))
+            over = len(self._retired) >= self.reclaim_threshold
+        if over:
+            self.reclaim(engine)
+
+    def bump_epoch(self) -> None:
+        with self._lock:
+            self._epoch += 1
+
+    def reclaim(self, engine: Optional[int] = None) -> int:
+        """Epoch fast path; POP fallback under pressure.  Returns # freed.
+
+        ``engine``: the calling engine's id (paper: pingAllToPublish skips
+        self -- a reclaimer reads its own reservations directly and must not
+        wait for its own publish counter)."""
+        self.bump_epoch()
+        freed = self._reclaim_epoch()
+        with self._lock:
+            pressure = len(self._retired) >= (self.pressure_factor
+                                              * self.reclaim_threshold)
+        if pressure:
+            freed += self._reclaim_pop(engine)
+        return freed
+
+    def _reclaim_epoch(self) -> int:
+        min_epoch = min(self._announced)
+        with self._lock:
+            keep, free_now = [], []
+            for b, e in self._retired:
+                (free_now if e < min_epoch else keep).append((b, e))
+            self._retired = keep
+            for b, _ in free_now:
+                self._free.append(b)
+            self.stats.freed += len(free_now)
+            if free_now:
+                self.stats.epoch_reclaims += 1
+        return len(free_now)
+
+    def _reclaim_pop(self, engine: Optional[int] = None) -> int:
+        """Ping all OTHER engines, wait for publishes, free the complement;
+        the caller's own live set is read directly (paper Alg. 2 line 37)."""
+        self.stats.pings += 1
+        snap = list(self._publish_counter)
+        others = [i for i in range(self.n_engines) if i != engine]
+        for i in others:
+            self._ping_flags[i].set()
+        deadline = time.monotonic() + self.ping_timeout_s
+        pending = set(others)
+        while pending and time.monotonic() < deadline:
+            pending = {i for i in pending
+                       if self._publish_counter[i] <= snap[i]}
+            if pending:
+                time.sleep(0.0005)
+        if pending:
+            # Assumption 1 violated (engine died?): stay safe, free nothing
+            # beyond what epochs allow.
+            return 0
+        reserved: Set[int] = set()
+        for i in others:
+            reserved |= self._live_published[i]
+        if engine is not None:
+            reserved |= set(self._live_local[engine])
+        with self._lock:
+            keep, free_now = [], []
+            for b, e in self._retired:
+                (free_now if b not in reserved else keep).append((b, e))
+            self._retired = keep
+            for b, _ in free_now:
+                self._free.append(b)
+            self.stats.freed += len(free_now)
+            if free_now:
+                self.stats.pop_reclaims += 1
+        return len(free_now)
+
+    # ------------------------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    @property
+    def retired_blocks(self) -> int:
+        with self._lock:
+            return len(self._retired)
+
+    def check_no_leaks(self) -> bool:
+        """All blocks accounted for: free + retired + live."""
+        live = set()
+        for s in self._live_local:
+            live |= s
+        with self._lock:
+            total = len(self._free) + len(self._retired) + len(live)
+            dup = (set(self._free) & live) | (
+                {b for b, _ in self._retired} & set(self._free))
+        return total == self.num_blocks and not dup

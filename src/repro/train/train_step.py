@@ -1,0 +1,101 @@
+"""Loss and the jit-able train/prefill/serve step functions that the dry-run
+lowers and the trainer executes."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.attention import apply_attn
+from repro.models.model import apply_model
+from repro.optim.adamw import AdamWState, adamw_update, cosine_schedule
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean CE; vocab may be model-sharded -- logsumexp + one-hot einsum keep
+    the reduction local + one psum (no gather of the full vocab)."""
+    l32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(l32, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=l32.dtype)
+    ll = jnp.einsum("bsv,bsv->bs", l32, onehot)
+    return (lse - ll).mean()
+
+
+def _mtp_loss(params, cfg, hidden, tokens, targets):
+    """DeepSeek-V3 multi-token prediction: predict t+2 from a fused
+    (hidden_t, embed(t+1)) stream through one extra block."""
+    mtp = params["mtp"]
+    dt = jnp.dtype(cfg.dtype)
+    nxt = jnp.roll(tokens, -1, axis=1)
+    e = jnp.take(params["embed"], nxt, axis=0).astype(dt)
+    h = jnp.concatenate([
+        L.rms_norm(hidden, mtp["norm_h"], cfg.norm_eps),
+        L.rms_norm(e, mtp["norm_e"], cfg.norm_eps)], axis=-1) @ mtp["proj"]
+    lp = mtp["layer"]
+    hh = L.rms_norm(h, lp["norm1"], cfg.norm_eps)
+    o, _ = apply_attn(lp["attn"], hh, cfg=cfg, kind="full", mode="train")
+    h = h + o
+    hh = L.rms_norm(h, lp["norm2"], cfg.norm_eps)
+    h = h + L.mlp_apply(lp["mlp"], hh, cfg.act)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", h, head.astype(dt))
+    t2 = jnp.roll(targets, -1, axis=1)
+    return cross_entropy(logits[:, :-2], t2[:, :-2])
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig):
+    logits, _, aux = apply_model(params, batch["tokens"], cfg=cfg,
+                                 mode="train", frontend=batch.get("frontend"))
+    loss = cross_entropy(logits, batch["targets"])
+    metrics = {"ce": loss}
+    loss = loss + aux["moe_aux"] + aux["moe_z"]
+    metrics["moe_aux"] = aux["moe_aux"]
+    if cfg.mtp:
+        mtp = _mtp_loss(params, cfg, aux["mtp_hidden"], batch["tokens"],
+                        batch["targets"])
+        loss = loss + 0.3 * mtp
+        metrics["mtp"] = mtp
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(cfg: ArchConfig, lr=None, **opt_kw):
+    lr = lr or cosine_schedule()
+
+    def train_step(params, opt_state: AdamWState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            functools.partial(loss_fn, cfg=cfg), has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, lr=lr, **opt_kw)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, tokens, frontend=None):
+        logits, cache, _ = apply_model(params, tokens, cfg=cfg, mode="prefill",
+                                       frontend=frontend)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """One decode step: new token against the KV cache (donated/aliased)."""
+
+    def serve_step(params, cache, tokens):
+        logits, cache, _ = apply_model(params, tokens, cfg=cfg, mode="decode",
+                                       cache=cache)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step

@@ -1,0 +1,146 @@
+"""Fault-tolerant training loop.
+
+Production posture (DESIGN.md): checkpoint/restart with async writes,
+straggler detection (per-step wall-time EMA), elastic restore (checkpoints
+are mesh-agnostic), preemption-signal handling, and data-pipeline state
+carried inside the checkpoint so a restart replays the exact stream.
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models.model import init_params
+from repro.optim.adamw import AdamWState, adamw_init, cosine_schedule
+from repro.train.checkpoint import CheckpointManager
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_async: bool = True
+    log_every: int = 10
+    straggler_factor: float = 3.0   # step > factor*EMA => flag
+    ema_alpha: float = 0.2
+    seed: int = 0
+    lr_peak: float = 3e-4
+
+
+@dataclass
+class StragglerMonitor:
+    """Flags abnormally slow steps -- on a real cluster this feeds the
+    controller that triggers hot-spare swap / bad-host eviction."""
+
+    factor: float = 3.0
+    alpha: float = 0.2
+    ema: Optional[float] = None
+    events: List[Dict] = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        slow = self.ema is not None and dt > self.factor * self.ema
+        if slow:
+            self.events.append({"step": step, "dt": dt, "ema": self.ema})
+        # don't poison the EMA with the outlier
+        if not slow:
+            self.ema = dt if self.ema is None else \
+                (1 - self.alpha) * self.ema + self.alpha * dt
+        return slow
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig,
+                 data_cfg: Optional[DataConfig] = None, mesh=None,
+                 shardings=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.shardings = shardings
+        self.data = TokenPipeline(data_cfg or DataConfig(
+            vocab=cfg.vocab, seq_len=64, global_batch=8, seed=tcfg.seed))
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir)
+        self.monitor = StragglerMonitor(tcfg.straggler_factor, tcfg.ema_alpha)
+        self.step_fn = jax.jit(make_train_step(
+            cfg, lr=cosine_schedule(tcfg.lr_peak, warmup=20, total=tcfg.steps)),
+            donate_argnums=(0, 1))
+        self._preempted = False
+        self.history: List[Dict] = []
+
+    # -- preemption: SIGTERM triggers checkpoint-and-exit --
+
+    def install_preemption_handler(self):
+        def _handler(signum, frame):
+            self._preempted = True
+        signal.signal(signal.SIGTERM, _handler)
+
+    # -- state --
+
+    def init_state(self):
+        params = init_params(self.cfg, jax.random.PRNGKey(self.tcfg.seed))
+        return params, adamw_init(params)
+
+    def try_restore(self):
+        """Elastic restart: resume from the latest checkpoint if present."""
+        if self.ckpt.latest_step() is None:
+            return None
+        params, opt = self.init_state()
+        state, meta = self.ckpt.restore({"params": params, "opt": opt},
+                                        shardings=self.shardings)
+        start = int(meta["extra"]["data_step"])
+        return state["params"], state["opt"], start
+
+    # -- loop --
+
+    def run(self, start_step: int = 0, params=None, opt_state=None,
+            max_steps: Optional[int] = None) -> Dict[str, Any]:
+        if params is None:
+            restored = self.try_restore()
+            if restored is not None:
+                params, opt_state, start_step = restored
+            else:
+                params, opt_state = self.init_state()
+        steps = max_steps if max_steps is not None else self.tcfg.steps
+        step = start_step
+        while step < steps and not self._preempted:
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.data.batch(step).items()}
+            if self.cfg.n_frontend_tokens:
+                # stub modality frontend (DESIGN.md: precomputed embeddings)
+                key = jax.random.PRNGKey(self.tcfg.seed * 100003 + step)
+                batch["frontend"] = 0.02 * jax.random.normal(
+                    key, (batch["tokens"].shape[0],
+                          self.cfg.n_frontend_tokens, self.cfg.d_model),
+                    jnp.float32).astype(jnp.dtype(self.cfg.dtype))
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])  # blocks: honest step timing
+            dt = time.perf_counter() - t0
+            slow = self.monitor.observe(step, dt)
+            rec = {"step": step, "loss": loss, "dt": dt, "straggler": slow}
+            self.history.append(rec)
+            if step % self.tcfg.log_every == 0:
+                print(f"[train] step={step} loss={loss:.4f} dt={dt*1e3:.0f}ms"
+                      + (" STRAGGLER" if slow else ""))
+            step += 1
+            if step % self.tcfg.ckpt_every == 0 or self._preempted:
+                self.ckpt.save(step, {"params": params, "opt": opt_state},
+                               extra={"data_step": step,
+                                      **self.data.state_dict(step)},
+                               async_=self.tcfg.ckpt_async)
+        self.ckpt.wait()
+        if self._preempted:
+            self.ckpt.save(step, {"params": params, "opt": opt_state},
+                           extra={"data_step": step})
+        return {"params": params, "opt": opt_state, "step": step,
+                "history": self.history,
+                "straggler_events": self.monitor.events}

@@ -1,0 +1,121 @@
+"""Runtime block-pool tests: EpochPOP semantics with REAL threads -- the
+fast path frees without pings; a stalled engine forces the POP fallback;
+no block is ever freed while an engine still holds it."""
+
+import threading
+import time
+
+import pytest
+
+from repro.runtime.block_pool import BlockPool, OutOfBlocks
+
+
+def test_epoch_fast_path_no_pings():
+    pool = BlockPool(64, n_engines=2, reclaim_threshold=8)
+    for step in range(20):
+        pool.start_step(0)
+        blocks = pool.allocate(0, 4)
+        pool.end_step(0)
+        pool.start_step(1)
+        pool.end_step(1)
+        pool.retire(0, blocks)
+    pool.reclaim()
+    assert pool.stats.pings == 0, "quiescent engines must never be pinged"
+    assert pool.stats.freed > 0
+    assert pool.free_blocks + pool.retired_blocks == 64
+    assert pool.check_no_leaks()
+
+
+def test_stalled_engine_triggers_pop_and_bounded_garbage():
+    pool = BlockPool(256, n_engines=2, reclaim_threshold=8,
+                     pressure_factor=2)
+    # engine 1 stalls mid-step holding 4 blocks, but keeps hitting safepoints
+    # (Assumption 1: it can still publish)
+    pool.start_step(1)
+    held = pool.allocate(1, 4)
+    stop = threading.Event()
+
+    def stalled():
+        while not stop.is_set():
+            pool.safepoint(1)   # delayed thread still services pings
+            time.sleep(0.001)
+
+    t = threading.Thread(target=stalled, daemon=True)
+    t.start()
+
+    # engine 0 churns: allocate + retire
+    for _ in range(40):
+        pool.start_step(0)
+        b = pool.allocate(0, 4)
+        pool.retire(0, b)
+        pool.end_step(0)
+
+    stop.set()
+    t.join()
+    assert pool.stats.pings > 0, "stall should force publish-on-ping"
+    assert pool.stats.pop_reclaims > 0
+    # bounded garbage: everything except the stalled engine's live set and
+    # at most one threshold batch is freed
+    assert pool.retired_blocks <= 2 * pool.reclaim_threshold
+    # the held blocks were never freed
+    assert all(b not in pool._free for b in held)
+    assert pool.check_no_leaks()
+
+
+def test_pop_never_frees_published_live_blocks_concurrent():
+    """Stress: two engine threads churn while a reclaimer thread pings;
+    a block must never be double-allocated while an engine holds it."""
+    pool = BlockPool(128, n_engines=2, reclaim_threshold=4, pressure_factor=1)
+    errors = []
+    stop = threading.Event()
+
+    def engine(eid):
+        held = {}
+        n = 0
+        while not stop.is_set():
+            pool.start_step(eid)
+            try:
+                b = pool.allocate(eid, 2)
+            except OutOfBlocks:
+                pool.reclaim()
+                pool.end_step(eid)
+                continue
+            held[n] = b
+            # every allocated block must be exclusively ours
+            other = 1 - eid
+            if set(b) & pool._live_local[other]:
+                errors.append(f"double allocation {b}")
+            if n >= 3:
+                old = held.pop(n - 3)
+                pool.retire(eid, old)
+            n += 1
+            pool.end_step(eid)
+        for b in held.values():
+            pool.retire(eid, b)
+
+    ts = [threading.Thread(target=engine, args=(i,)) for i in range(2)]
+    for t in ts:
+        t.start()
+    time.sleep(1.0)
+    stop.set()
+    for t in ts:
+        t.join(timeout=10)
+    pool.reclaim()
+    assert not errors, errors
+    assert pool.check_no_leaks()
+    assert pool.stats.freed > 50
+
+
+def test_dead_engine_keeps_pool_safe():
+    """If an engine never publishes (violating Assumption 1), the POP pass
+    times out and frees NOTHING it cannot prove safe."""
+    pool = BlockPool(32, n_engines=2, reclaim_threshold=2,
+                     pressure_factor=1, ping_timeout_s=0.2)
+    pool.start_step(1)            # engine 1 announces then dies
+    dead_held = pool.allocate(1, 2)
+    for _ in range(4):
+        b = pool.allocate(0, 2)
+        pool.retire(0, b)
+    freed = pool.reclaim()        # ping times out
+    assert freed == 0
+    assert all(b not in pool._free for b in dead_held)

@@ -1,0 +1,49 @@
+"""Dry-run smoke (deliverable e): two cheap cells lower+compile on the
+production meshes in a subprocess that owns the 512-device XLA flag."""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _dryrun(args):
+    env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+           "JAX_PLATFORMS": "cpu"}
+    r = subprocess.run([sys.executable, "-m", "repro.launch.dryrun"] + args,
+                       capture_output=True, text=True, timeout=1200, env=env,
+                       cwd=ROOT)
+    assert r.returncode == 0, r.stdout + r.stderr[-2000:]
+    return r.stdout
+
+
+def test_single_pod_cell_compiles(tmp_path):
+    out = _dryrun(["--arch", "rwkv6_1p6b", "--shape", "decode_32k",
+                   "--out", str(tmp_path)])
+    assert "OK" in out
+    d = json.loads((tmp_path / "rwkv6_1p6b_decode_32k.json").read_text())
+    assert d["status"] == "ok"
+    assert d["n_devices"] == 256
+    r = d["roofline"]
+    assert r["flops_per_device"] > 0
+    assert r["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_multi_pod_cell_compiles(tmp_path):
+    out = _dryrun(["--arch", "whisper_small", "--shape", "prefill_32k",
+                   "--multi-pod", "--out", str(tmp_path)])
+    assert "OK" in out
+    d = json.loads((tmp_path / "whisper_small_prefill_32k_mp.json").read_text())
+    assert d["status"] == "ok"
+    assert d["n_devices"] == 512
+
+
+def test_carveout_cell_skips(tmp_path):
+    out = _dryrun(["--arch", "gemma2_27b", "--shape", "long_500k",
+                   "--out", str(tmp_path)])
+    assert "SKIP" in out

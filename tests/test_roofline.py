@@ -1,0 +1,75 @@
+"""Loop-aware HLO analyzer tests: exact on loop-free programs, trip-count
+multiplication on scans, collective ring formulas, DUS/movement handling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.hlo_stats import analyze
+from repro.roofline.analysis import collective_bytes
+
+
+def test_loop_free_dot_flops_exact():
+    def f(a, b, c):
+        return (a @ b) @ c
+
+    A = jax.ShapeDtypeStruct((512, 256), jnp.float32)
+    B = jax.ShapeDtypeStruct((256, 1024), jnp.float32)
+    C = jax.ShapeDtypeStruct((1024, 128), jnp.float32)
+    comp = jax.jit(f).lower(A, B, C).compile()
+    st = analyze(comp.as_text())
+    assert st.flops == 2 * 512 * 256 * 1024 + 2 * 512 * 1024 * 128
+
+
+def test_scan_multiplies_by_trip_count():
+    def g(x, ws):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+
+    X = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    W = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+    comp = jax.jit(g).lower(X, W).compile()
+    st = analyze(comp.as_text())
+    assert st.flops == 10 * 2 * 128 ** 3
+    assert st.n_while >= 1
+    # cost_analysis counts the body once -- the analyzer must not
+    ca = comp.cost_analysis()
+    assert st.flops > float(ca.get("flops", 0.0)) * 5
+
+
+def test_nested_scan_trip_counts_compose():
+    def h(x, ws):
+        def outer(c, w):
+            def inner(ci, _):
+                return ci @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        return jax.lax.scan(outer, x, ws)[0]
+
+    X = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    W = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+    comp = jax.jit(h).lower(X, W).compile()
+    st = analyze(comp.as_text())
+    assert st.flops == 5 * 3 * 2 * 64 ** 3
+
+
+def test_collective_ring_formulas():
+    hlo = """
+HloModule m
+ENTRY %main (p: f32[1024]) -> f32[1024] {
+  %p = f32[1024]{0} parameter(0)
+  ROOT %ar = f32[1024]{0} all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+    st = collective_bytes(hlo)
+    # ring AR: 2 * size * (n-1)/n
+    assert abs(st.wire_bytes - 2 * 4096 * 3 / 4) < 1e-6
+
+
+def test_semantic_excludes_pure_movement():
+    def f(a):
+        return jnp.transpose(a).copy().astype(jnp.bfloat16)
+
+    A = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    comp = jax.jit(f).lower(A).compile()
+    st = analyze(comp.as_text())
+    assert st.hbm_bytes_semantic <= st.hbm_bytes

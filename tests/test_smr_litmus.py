@@ -1,0 +1,141 @@
+"""Litmus tests for the memory-model semantics at the heart of the paper.
+
+The canonical use-after-free interleaving (paper §2.1.1): without the
+store-load fence, a reader's reservation store can sit in its store buffer
+while the validation load executes, so a reclaimer scanning the shared
+reservation slots misses it, frees the node, and the reader's subsequent
+access faults.  We orchestrate exactly that schedule and assert:
+
+* HP-broken (no fence)  -> the simulator DETECTS the use-after-free;
+* HP (fence)            -> safe (the fence drains the reservation);
+* HPAsym (membarrier)   -> safe (the reclaimer's barrier drains it);
+* HazardPtrPOP          -> safe (the ping forces a publish BEFORE the scan);
+* EpochPOP              -> safe (same, via the POP fallback).
+
+This validates that the simulator's memory model is weak enough to express
+the bug class, and that the paper's algorithms actually close it.
+"""
+
+import pytest
+
+from repro.core.sim.engine import Costs, Engine, UseAfterFree
+from repro.core.smr.registry import make_scheme
+
+KEY, NEXT = 0, 1
+
+
+def _litmus(scheme_name: str, reader_delay_ops: int = 40, seed: int = 0):
+    """Two threads, one shared pointer cell P -> node X.
+
+    T0 (reader):   r = READ(P)  [reserve X]; then a long "descheduled" stretch
+                   of tiny ops; then load X.key  (the potentially-fatal access)
+    T1 (reclaimer): unlink X from P; retire X (reclaim_freq=1 => immediate
+                   scan+free attempt)
+    """
+    # very long drain: the broken reservation store stays invisible throughout
+    costs = Costs(drain_latency=10_000_000, drain_jitter=0, signal_latency=500)
+    eng = Engine(2, costs=costs, seed=seed)
+    eng.jitter = 0.0
+    smr = make_scheme(scheme_name, eng, max_hp=2, reclaim_freq=1)
+    eng.set_signal_handler(smr.handler)
+
+    P = eng.alloc_shared(1)
+    X = eng.mem.alloc.alloc(2)
+    eng.mem.cells[X + KEY] = 42
+    eng.mem.cells[P] = X
+    out = {}
+
+    def reader(t):
+        smr.thread_init(t)
+        yield from smr.start_op(t)
+        x = yield from smr.read(t, 0, P)
+        assert x == X
+        # "descheduled": many small ops so pings can land mid-delay
+        for _ in range(reader_delay_ops):
+            yield from t.work(100)
+        out["val"] = yield from t.load(x + KEY)   # UAF if x was freed
+        yield from smr.end_op(t)
+
+    def reclaimer(t):
+        smr.thread_init(t)
+        yield from smr.start_op(t)
+        yield from t.work(300)                   # let the reader reserve first
+        ok = yield from t.cas(P, X, 0)           # unlink
+        assert ok
+        yield from smr.retire(t, X)              # threshold 1: reclaim now
+        yield from smr.end_op(t)
+        yield from smr.flush(t)
+
+    eng.spawn(0, reader)
+    eng.spawn(1, reclaimer)
+    eng.run()
+    return out
+
+
+def test_hp_broken_hits_use_after_free():
+    with pytest.raises(UseAfterFree):
+        _litmus("HP-broken")
+
+
+@pytest.mark.parametrize("scheme", ["HP", "HPAsym", "HazardPtrPOP", "EpochPOP"])
+def test_fenced_and_pop_schemes_survive_litmus(scheme):
+    out = _litmus(scheme)
+    assert out["val"] == 42
+
+
+def test_pop_publishes_exactly_on_ping():
+    """The reader must publish only because it was pinged (paper §3.1)."""
+    costs = Costs(drain_latency=10_000_000, drain_jitter=0, signal_latency=500)
+    eng = Engine(2, costs=costs, seed=0)
+    eng.jitter = 0.0
+    smr = make_scheme("HazardPtrPOP", eng, max_hp=2, reclaim_freq=1)
+    eng.set_signal_handler(smr.handler)
+    P = eng.alloc_shared(1)
+    X = eng.mem.alloc.alloc(2)
+    eng.mem.cells[P] = X
+    pubs = []
+
+    def reader(t):
+        smr.thread_init(t)
+        yield from smr.start_op(t)
+        yield from smr.read(t, 0, P)
+        for _ in range(60):
+            yield from t.work(100)
+            pubs.append(t.stats.publishes)
+        yield from smr.end_op(t)
+
+    def reclaimer(t):
+        smr.thread_init(t)
+        yield from t.work(500)
+        ok = yield from t.cas(P, X, 0)
+        assert ok
+        yield from smr.retire(t, X)
+
+    eng.spawn(0, reader)
+    eng.spawn(1, reclaimer)
+    eng.run()
+    # no publish before the ping, exactly one after
+    assert pubs[0] == 0 and pubs[-1] == 1
+    # and the reserved node was NOT freed
+    assert smr.frees == 0 and smr.garbage == 1
+
+
+def test_stochastic_uaf_seeds_still_trip():
+    """Pinned seeds from a 100-seed sweep: the full workload harness also
+    exposes the fence-less race (and only for the broken scheme)."""
+    from repro.core.workload import run_trial
+
+    costs = dict(costs=Costs(drain_latency=5000, drain_jitter=2500), preempt_prob=0.03)
+    tripped = 0
+    for seed in (19, 22, 62, 96):
+        try:
+            run_trial("HML", "HP-broken", 8, workload="update", key_range=16,
+                      duration=250_000, seed=seed, reclaim_freq=2, **costs)
+        except UseAfterFree:
+            tripped += 1
+    assert tripped >= 2
+    # identical pressure, correct schemes: never
+    for scheme in ("HP", "HazardPtrPOP"):
+        for seed in (19, 22):
+            run_trial("HML", scheme, 8, workload="update", key_range=16,
+                      duration=250_000, seed=seed, reclaim_freq=2, **costs)

@@ -1,0 +1,101 @@
+"""Property-based tests (hypothesis) over the system's invariants:
+
+1. linearizable-set semantics hold for every scheme x structure x schedule;
+2. the allocator never observes use-after-free for any correct scheme;
+3. robust schemes respect the paper's garbage bound;
+4. POP publishes only in response to pings, with exactly one fence each;
+5. the simulator is deterministic (same seed -> identical trace results).
+"""
+
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sim.engine import Costs
+from repro.core.smr.registry import PAPER_SET
+from repro.core.workload import run_trial
+
+SCHEMES = st.sampled_from(PAPER_SET)
+STRUCTS = st.sampled_from(["HML", "LL", "HMHT", "DGT"])
+
+
+def _expected_final(key_range: int, seed: int, per_key):
+    keys = list(range(key_range))
+    random.Random(seed).shuffle(keys)
+    pre = set(keys[: key_range // 2])
+    exp = set()
+    for k in range(key_range):
+        n = (1 if k in pre else 0) + per_key.get(k, 0)
+        assert n in (0, 1), f"per-key toggle invariant broken at {k}: {n}"
+        if n:
+            exp.add(k)
+    return exp
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    scheme=SCHEMES,
+    structure=STRUCTS,
+    seed=st.integers(0, 10_000),
+    nthreads=st.integers(2, 6),
+    workload=st.sampled_from(["read", "update"]),
+)
+def test_set_semantics_and_no_uaf(scheme, structure, seed, nthreads, workload):
+    key_range = 32
+    r = run_trial(structure, scheme, nthreads, workload=workload,
+                  key_range=key_range, duration=120_000, seed=seed,
+                  reclaim_freq=8, epoch_freq=4)
+    snap = set(r._structure.snapshot_keys())
+    exp = _expected_final(key_range, seed, r.per_key)
+    assert snap == exp, f"{scheme}/{structure}: extra={snap-exp} missing={exp-snap}"
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    scheme=st.sampled_from(["HP", "HPAsym", "HazardPtrPOP", "EpochPOP"]),
+    seed=st.integers(0, 10_000),
+)
+def test_robust_garbage_bound(scheme, seed):
+    n = 4
+    r = run_trial("HML", scheme, n, workload="update", key_range=32,
+                  duration=200_000, seed=seed, reclaim_freq=8)
+    smr = r._smr
+    c = getattr(smr, "C", 1)
+    bound = n * smr.max_hp + n * max(c, 1) * smr.reclaim_freq + 16
+    assert r.garbage_peak <= bound + n * smr.reclaim_freq
+    assert smr.garbage <= bound
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), nthreads=st.integers(2, 6))
+def test_pop_publishes_only_on_ping(seed, nthreads):
+    r = run_trial("HML", "HazardPtrPOP", nthreads, workload="update",
+                  key_range=32, duration=150_000, seed=seed, reclaim_freq=8)
+    # each publish is handler-driven, and carries exactly one fence
+    assert r.publishes <= r.signals_handled
+    assert r.fences == r.publishes
+    # reads never fence: reads >> fences in any update-heavy run
+    assert r.ops > 0 and r.fences < r.ops
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    scheme=st.sampled_from(["HazardPtrPOP", "EpochPOP", "HP"]),
+    seed=st.integers(0, 1000),
+)
+def test_simulator_determinism(scheme, seed):
+    a = run_trial("HML", scheme, 3, key_range=32, duration=100_000, seed=seed)
+    b = run_trial("HML", scheme, 3, key_range=32, duration=100_000, seed=seed)
+    assert (a.ops, a.fences, a.freed, a.sim_cycles) == (b.ops, b.fences, b.freed, b.sim_cycles)
+    assert a._structure.snapshot_keys() == b._structure.snapshot_keys()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_nbr_neutralization_consistency(seed):
+    """NBR+ restarts must not corrupt the set (restarted ops retry cleanly)."""
+    r = run_trial("HML", "NBR+", 5, workload="update", key_range=24,
+                  duration=200_000, seed=seed, reclaim_freq=4)
+    snap = set(r._structure.snapshot_keys())
+    exp = _expected_final(24, seed, r.per_key)
+    assert snap == exp

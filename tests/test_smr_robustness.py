@@ -1,0 +1,120 @@
+"""Robustness (paper Properties 3 & 5): a stalled thread must not cause
+unbounded garbage under the POP schemes, while EBR -- by design -- grows
+without bound.  The stalled thread is *delayed but schedulable* (it keeps
+executing tiny ops), matching the paper's Assumption 1 that pinged threads
+publish within bounded time."""
+
+import random
+
+import pytest
+
+from repro.core.sim.engine import Costs, Engine
+from repro.core.smr.registry import make_scheme
+from repro.core.structures.harris_michael import HarrisMichaelList
+
+DURATION = 500_000.0
+
+
+def _run_with_stalled_reader(scheme_name: str, nthreads: int = 6, seed: int = 7):
+    eng = Engine(nthreads, costs=Costs(), seed=seed)
+    smr = make_scheme(scheme_name, eng, max_hp=4, reclaim_freq=16, epoch_freq=4)
+    eng.set_signal_handler(smr.handler)
+    lst = HarrisMichaelList(eng, smr)
+
+    # prefill
+    def prefill(t):
+        smr.thread_init(t)
+        for k in range(0, 64, 2):
+            yield from smr.start_op(t)
+            yield from lst.insert(t, k)
+            yield from smr.end_op(t)
+
+    eng.spawn(0, prefill)
+    eng.run()
+    for t in eng.threads:
+        t.clock, t.done, t.frames = 0.0, False, []
+
+    # thread 0: enters an operation, reserves a node, then stalls "forever"
+    # (but keeps being scheduled for tiny slices -- so signal handlers run)
+    def stalled(t):
+        smr.thread_init(t)
+        yield from smr.start_op(t)
+        yield from smr.read(t, 0, lst.head)
+        while t.clock < DURATION:
+            yield from t.work(200)
+        # never calls end_op within the window
+
+    def churn(t):
+        smr.thread_init(t)
+        rng = random.Random(seed ^ t.tid)
+        while t.clock < DURATION:
+            k = rng.randrange(64)
+            yield from smr.start_op(t)
+            if rng.random() < 0.5:
+                yield from lst.insert(t, k)
+            else:
+                yield from lst.delete(t, k)
+            yield from smr.end_op(t)
+
+    eng.spawn(0, stalled)
+    for tid in range(1, nthreads):
+        eng.spawn(tid, churn)
+    eng.run()
+    retired = sum(t.stats.retired for t in eng.threads)
+    return smr, retired, nthreads
+
+
+def test_ebr_unbounded_garbage_under_stall():
+    smr, retired, _ = _run_with_stalled_reader("EBR")
+    # the stalled thread pins the minimum epoch: (almost) nothing is freed
+    assert retired > 300
+    assert smr.frees < 0.05 * retired
+    assert smr.garbage > 0.9 * retired
+
+
+@pytest.mark.parametrize("scheme", ["HazardPtrPOP", "EpochPOP", "HP", "HPAsym"])
+def test_pop_and_hp_bounded_garbage_under_stall(scheme):
+    smr, retired, n = _run_with_stalled_reader(scheme)
+    assert retired > 300
+    # paper bound: <= N*H reserved + per-thread retire thresholds
+    bound = n * smr.max_hp + n * max(smr.reclaim_freq * getattr(smr, "C", 1), smr.reclaim_freq) + 32
+    assert smr.garbage <= bound, f"{scheme}: garbage {smr.garbage} > bound {bound}"
+    assert smr.frees > 0.5 * retired
+
+
+def test_epoch_pop_actually_uses_pop_fallback_under_stall():
+    smr, _, _ = _run_with_stalled_reader("EpochPOP")
+    assert smr.pop_reclaims > 0, "stall should trigger the publish-on-ping fallback"
+    assert smr.epoch_reclaims > 0
+
+
+def test_epoch_pop_stays_on_epoch_path_without_stall():
+    """No delays -> EpochPOP should reclaim via epochs and (almost) never ping."""
+    eng = Engine(4, costs=Costs(), seed=11)
+    smr = make_scheme("EpochPOP", eng, max_hp=4, reclaim_freq=16, epoch_freq=4)
+    eng.set_signal_handler(smr.handler)
+    lst = HarrisMichaelList(eng, smr)
+
+    def churn(t):
+        smr.thread_init(t)
+        rng = random.Random(t.tid)
+        while t.clock < DURATION:
+            k = rng.randrange(64)
+            yield from smr.start_op(t)
+            if rng.random() < 0.5:
+                yield from lst.insert(t, k)
+            else:
+                yield from lst.delete(t, k)
+            yield from smr.end_op(t)
+
+    for tid in range(4):
+        eng.spawn(tid, churn)
+    eng.run()
+    assert smr.epoch_reclaims > 5
+    assert smr.pop_reclaims == 0, "no stall => the POP fallback should stay cold"
+
+
+def test_he_era_bounded_under_stall():
+    """HE/IBR: a stalled reader only pins lifespan-intersecting nodes."""
+    smr, retired, _ = _run_with_stalled_reader("HE")
+    assert smr.frees > 0.5 * retired

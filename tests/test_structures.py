@@ -1,0 +1,78 @@
+"""Data-structure unit tests: sequential semantics vs a model set, and
+concurrent snapshot consistency under a churn workload for each structure."""
+
+import random
+
+import pytest
+
+from repro.core.sim.engine import Costs, Engine
+from repro.core.smr.registry import make_scheme
+from repro.core.workload import STRUCTURES, run_trial
+
+
+@pytest.mark.parametrize("structure", ["HML", "LL", "HMHT", "DGT"])
+def test_sequential_semantics_vs_model(structure):
+    eng = Engine(1, costs=Costs(), seed=0)
+    smr = make_scheme("NR", eng, max_hp=4)
+    eng.set_signal_handler(smr.handler)
+    ds = STRUCTURES[structure](eng, smr, 64)
+    rng = random.Random(42)
+    ops = []
+    for _ in range(400):
+        k = rng.randrange(40)
+        ops.append((rng.choice(["i", "d", "c"]), k))
+    results = []
+
+    def body(t):
+        smr.thread_init(t)
+        model = set()
+        for kind, k in ops:
+            yield from smr.start_op(t)
+            if kind == "i":
+                r = yield from ds.insert(t, k)
+                expected = k not in model
+                model.add(k)
+            elif kind == "d":
+                r = yield from ds.delete(t, k)
+                expected = k in model
+                model.discard(k)
+            else:
+                r = yield from ds.contains(t, k)
+                expected = k in model
+            yield from smr.end_op(t)
+            results.append((kind, k, r, expected))
+
+    eng.spawn(0, body)
+    eng.run()
+    for kind, k, r, expected in results:
+        assert r == expected, f"{structure}: {kind}({k}) -> {r}, want {expected}"
+
+
+@pytest.mark.parametrize("structure", ["HML", "LL", "HMHT", "DGT"])
+@pytest.mark.parametrize("scheme", ["EpochPOP", "HazardPtrPOP", "HE"])
+def test_concurrent_consistency(structure, scheme):
+    key_range = 32
+    seed = 5
+    r = run_trial(structure, scheme, 4, workload="update", key_range=key_range,
+                  duration=150_000, seed=seed, reclaim_freq=8)
+    keys = list(range(key_range))
+    random.Random(seed).shuffle(keys)
+    pre = set(keys[: key_range // 2])
+    exp = set()
+    for k in range(key_range):
+        n = (1 if k in pre else 0) + r.per_key.get(k, 0)
+        assert n in (0, 1)
+        if n:
+            exp.add(k)
+    assert set(r._structure.snapshot_keys()) == exp
+
+
+def test_memory_is_actually_reclaimed_and_recycled():
+    """Freed nodes must be recycled by the allocator (ABA pressure is real)."""
+    r = run_trial("HML", "EpochPOP", 4, workload="update", key_range=32,
+                  duration=300_000, seed=9, reclaim_freq=8)
+    alloc = r._engine.mem.alloc
+    assert r.freed > 100
+    assert alloc.freed_count > 100
+    # the arena did not grow linearly with retires: recycling works
+    assert alloc.live_count + len(sum(alloc.freelist.values(), [])) < r.retired
