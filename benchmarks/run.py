@@ -71,6 +71,13 @@ def main() -> None:
                    f"{1e6/max(r['steps_per_s'],1e-9):.2f},"
                    f"steps_per_s={r['steps_per_s']:.0f}")
 
+    # -- framework: serving-side reclamation grid (scheme x threads x pressure) --
+    from benchmarks.serve_reclaim import QUICK_SCHEMES, run_grid, to_csv
+    sr = _quiet(run_grid, schemes=QUICK_SCHEMES, threads=(1, 2),
+                pressures=("high",), duration=0.2)
+    csv.extend(to_csv(sr))
+    Path("results/serve_reclaim.json").write_text(json.dumps(sr, indent=1))
+
     # -- kernels --
     from benchmarks.kernel_bench import bench_flash, bench_linear_scan, bench_paged
     for r in [_quiet(bench_flash), _quiet(bench_linear_scan), _quiet(bench_paged)]:

@@ -1,0 +1,154 @@
+"""Serving-side reclamation grid: scheme x engine-threads x eviction
+pressure over the SMR-managed block pool (runtime/reclaim.py).
+
+Each engine thread runs the serving runtime's block protocol without the
+model math: start_step -> allocate -> batched reserve over its working set
+-> touch every reserved block (the use-after-free tripwire) -> retire the
+oldest request -> end_step.  "high" pressure shrinks the pool so reclamation
+runs constantly; "low" gives it slack.  The robustness metric is
+**peak-unreclaimed-blocks** (pool.stats.retired_peak): how much dead memory
+a scheme let pile up -- the paper's garbage-bound axis transplanted to the
+serving runtime.
+
+    PYTHONPATH=src python benchmarks/serve_reclaim.py [--quick]
+
+CSV schema (matched to benchmarks/run.py): ``name,us_per_call,derived``
+where name = serve_reclaim:<scheme>:t<threads>:<pressure>, us_per_call is
+wall microseconds per engine step, and derived packs
+peak_unreclaimed/freed/pings/publishes/uaf.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from pathlib import Path
+
+from repro.core.sim.engine import UseAfterFree
+from repro.runtime.block_pool import BlockPool, OutOfBlocks
+from repro.runtime.reclaim import make_policy
+
+# native EpochPOP pool + a representative slice of the registry
+DEFAULT_SCHEMES = ("EpochPOP-pool", "HP", "HE", "EBR", "NBR+",
+                   "HazardPtrPOP", "HazardEraPOP", "EpochPOP")
+QUICK_SCHEMES = ("EpochPOP-pool", "HazardPtrPOP", "EpochPOP")
+
+PRESSURE = {"low": 48, "high": 16}     # pool blocks per engine thread
+
+
+def run_one(scheme: str, n_engines: int, pressure: str = "high",
+            duration: float = 0.5, blocks_per_req: int = 4,
+            window: int = 3, seed: int = 0) -> dict:
+    """One grid cell: n_engines real threads churning requests."""
+    num_blocks = PRESSURE[pressure] * n_engines
+    pool = BlockPool(num_blocks, n_engines=n_engines,
+                     reclaim_threshold=max(4, num_blocks // 8),
+                     pressure_factor=2, policy=make_policy(scheme))
+    stop = threading.Event()
+    steps = [0] * n_engines
+    uaf = [0]
+    errors = []
+
+    def engine(eid: int):
+        live = []          # sliding window of in-flight "requests"
+        try:
+            while not stop.is_set():
+                pool.start_step(eid)
+                try:
+                    blocks = pool.allocate(eid, blocks_per_req)
+                    live.append(blocks)
+                except OutOfBlocks:
+                    pool.reclaim(eid)
+                    pool.end_step(eid)
+                    continue
+                # batched reader session over the whole working set, then
+                # touch every block (a decode step reading its KV pages)
+                session = [b for req in live for b in req]
+                pool.reserve(eid, session)
+                pool.touch(eid, session)
+                if len(live) > window:
+                    pool.retire(eid, live.pop(0))
+                pool.end_step(eid)
+                steps[eid] += 1
+        except UseAfterFree as e:
+            uaf[0] += 1
+            errors.append(str(e))
+        except Exception as e:  # noqa: BLE001
+            errors.append(f"{type(e).__name__}: {e}")
+
+    threads = [threading.Thread(target=engine, args=(i,))
+               for i in range(n_engines)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    time.sleep(duration)
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    elapsed = time.perf_counter() - t0
+    total = sum(steps)
+    pool.policy.flush()
+    s = pool.stats
+    return {
+        "scheme": scheme, "threads": n_engines, "pressure": pressure,
+        "steps": total,
+        "us_per_step": 1e6 * elapsed / max(total, 1),
+        "peak_unreclaimed": s.retired_peak,
+        "freed": s.freed, "allocated": s.allocated,
+        "pings": s.pings, "publishes": s.publishes,
+        "uaf": uaf[0], "errors": errors[:3],
+    }
+
+
+def run_grid(schemes=DEFAULT_SCHEMES, threads=(1, 2, 4),
+             pressures=("low", "high"), duration: float = 0.5) -> list:
+    rows = []
+    for scheme in schemes:
+        for n in threads:
+            for p in pressures:
+                r = run_one(scheme, n, p, duration=duration)
+                rows.append(r)
+                print(f"# {scheme:14s} t={n} {p:4s} "
+                      f"{r['us_per_step']:9.1f} us/step "
+                      f"peak_unreclaimed={r['peak_unreclaimed']:4d} "
+                      f"freed={r['freed']:6d} pings={r['pings']:5d} "
+                      f"uaf={r['uaf']}")
+                assert r["uaf"] == 0, f"use-after-free under {scheme}: {r['errors']}"
+    return rows
+
+
+def to_csv(rows) -> list:
+    out = []
+    for r in rows:
+        out.append(
+            f"serve_reclaim:{r['scheme']}:t{r['threads']}:{r['pressure']},"
+            f"{r['us_per_step']:.2f},"
+            f"peak_unreclaimed={r['peak_unreclaimed']};freed={r['freed']};"
+            f"pings={r['pings']};publishes={r['publishes']};uaf={r['uaf']}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small grid for CI smoke (3 schemes x 2 threads)")
+    ap.add_argument("--duration", type=float, default=None)
+    ap.add_argument("--out", default="results/serve_reclaim.json")
+    args = ap.parse_args()
+    if args.quick:
+        rows = run_grid(schemes=QUICK_SCHEMES, threads=(1, 2),
+                        pressures=("high",),
+                        duration=args.duration or 0.2)
+    else:
+        rows = run_grid(duration=args.duration or 0.5)
+    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.out).write_text(json.dumps(rows, indent=1))
+    print("name,us_per_call,derived")
+    print("\n".join(to_csv(rows)))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,13 @@
 """Serving example: batched requests through the continuous-batching engine
-whose KV blocks are reclaimed by the EpochPOP pool (the paper's technique
-as the framework feature).
+whose KV blocks are reclaimed by a pluggable SMR policy (the paper's
+techniques as the framework feature).
 
-    PYTHONPATH=src python examples/serve_paged.py
+    PYTHONPATH=src python examples/serve_paged.py                      # EpochPOP pool
+    PYTHONPATH=src python examples/serve_paged.py --smr HazardPtrPOP   # any registry scheme
+    PYTHONPATH=src python examples/serve_paged.py --smr EBR
 """
 
+import argparse
 import time
 
 import jax
@@ -12,29 +15,46 @@ import jax
 from repro.configs.base import ArchConfig, dense_stack
 from repro.models.model import init_params
 from repro.runtime.block_pool import BlockPool
+from repro.runtime.reclaim import make_policy, supported_schemes
 from repro.serve.engine import ServeEngine
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smr", default=None, metavar="SCHEME",
+                    help="SMR scheme guarding the block pool: "
+                         "'EpochPOP-pool' (native, default) or any of "
+                         + ", ".join(supported_schemes()))
+    ap.add_argument("--requests", type=int, default=10)
+    args = ap.parse_args()
+
     cfg = ArchConfig(name="serve-demo", d_model=64, n_heads=4, n_kv_heads=2,
                      d_ff=128, vocab=128, groups=dense_stack(2), remat="none",
                      dtype="float32")
     params = init_params(cfg, jax.random.PRNGKey(0))
-    pool = BlockPool(128, n_engines=1, reclaim_threshold=8, pressure_factor=2)
+    pool = BlockPool(128, n_engines=1, reclaim_threshold=8, pressure_factor=2,
+                     policy=make_policy(args.smr))
     eng = ServeEngine(cfg, params, max_batch=4, page_size=8, max_seq=64,
                       pool=pool)
     eng.start()
     t0 = time.time()
-    reqs = [eng.submit([1 + i % 16, 9, 42], max_new=8) for i in range(10)]
+    reqs = [eng.submit([1 + i % 16, 9, 42], max_new=8)
+            for i in range(args.requests)]
     for i, r in enumerate(reqs):
         r.done.wait(timeout=300)
         print(f"req {i}: prompt={r.prompt} -> {r.out}")
     eng.stop()
+    pool.policy.flush()
     s = pool.stats
-    print(f"\n{len(reqs)} requests in {time.time()-t0:.1f}s | pool: "
+    print(f"\n{len(reqs)} requests in {time.time()-t0:.1f}s | "
+          f"policy={pool.policy.name} | pool: "
           f"allocated={s.allocated} freed={s.freed} "
+          f"retired_peak={s.retired_peak} "
           f"epoch_reclaims={s.epoch_reclaims} pings={s.pings} "
-          f"pop_reclaims={s.pop_reclaims}")
+          f"pop_reclaims={s.pop_reclaims} touches={s.touches}")
+    if eng.error is not None:
+        raise SystemExit(f"ENGINE FAILED: {type(eng.error).__name__}: {eng.error}")
+    print("use-after-free: none (hard error if one had occurred)")
     print(f"no leaks: {pool.check_no_leaks()}")
 
 

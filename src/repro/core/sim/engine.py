@@ -114,9 +114,14 @@ class Allocator:
         self.sizes: Dict[int, int] = {}            # live/freed block -> size
         self.live_count = 0
         self.freed_count = 0
+        # When False, freed addresses are never handed out again, so every
+        # stale touch trips the FREED state check deterministically (no ABA
+        # masking).  Externally-driven harnesses (runtime/reclaim.py) disable
+        # recycling to turn the tripwire into a hard litmus.
+        self.recycle = True
 
     def alloc(self, nfields: int) -> int:
-        fl = self.freelist.get(nfields)
+        fl = self.freelist.get(nfields) if self.recycle else None
         if fl:
             addr = fl.pop()          # LIFO: maximizes ABA / recycling pressure
         else:
@@ -328,6 +333,47 @@ class Engine:
         if tgt.pending_signal_at is None or at < tgt.pending_signal_at:
             tgt.pending_signal_at = at
         sender.stats.signals_sent += 1
+
+    # ---- synchronous external driving ----
+
+    def drive(self, tid: int, gen: Generator) -> Any:
+        """Run ``gen`` to completion on thread ``tid`` without the scheduler.
+
+        This is the host-adaptation entry point used by the serving runtime
+        (runtime/reclaim.py): real OS threads drive scheme generators one at a
+        time (the caller serializes), so signals sent during the drive are
+        delivered *inline* -- the target's handler runs to completion at the
+        send point.  That realizes Assumption 1 (bounded delivery) with a zero
+        scheduling delay; the faithful asynchronous semantics remain covered
+        by :meth:`run`.  Returns the generator's return value.
+        """
+        t = self.threads[tid]
+        t.pending_neutralize = False       # driven code is never restartable
+        result: Any = None
+        try:
+            op = next(gen)
+            while True:
+                result = self._exec(t, op)
+                if op[0] == "signal":
+                    self._drive_handler(op[1])
+                op = gen.send(result)
+        except StopIteration as stop:
+            return stop.value
+
+    def _drive_handler(self, tid: int) -> None:
+        tgt = self.threads[tid]
+        if tgt.done or tgt.signal_handler is None:
+            return
+        tgt.pending_signal_at = None
+        tgt.clock += self.costs.handler_overhead
+        h = tgt.signal_handler(tgt)
+        try:
+            op = next(h)
+            while True:
+                op = h.send(self._exec(tgt, op))
+        except StopIteration:
+            pass
+        tgt.stats.signals_handled += 1
 
     # ---- core step ----
 

@@ -76,6 +76,27 @@ class SMRScheme:
         return
         yield
 
+    # ---- batched reader sessions (serving-runtime granularity) ----
+    #
+    # A decode step of the paged serving runtime touches dozens of KV blocks
+    # at once.  reserve_many/clear_many let such a reader protect the whole
+    # working set in one call, so schemes can amortize their publication cost
+    # across the batch -- POP schemes stay fully local (one publish per PING,
+    # not per block), HP pays ONE store-load fence per batch instead of one
+    # per block.  The default is the per-read loop, correct for every scheme.
+
+    def reserve_many(self, t: ThreadCtx, ptr_addrs: List[int], decode=None) -> Generator:
+        """Protect *ptr_addrs[i] in reservation slot i; returns loaded ptrs."""
+        ptrs = []
+        for i, a in enumerate(ptr_addrs):
+            p = yield from self.read(t, i, a, decode)
+            ptrs.append(p)
+        return ptrs
+
+    def clear_many(self, t: ThreadCtx) -> Generator:
+        """Drop every reservation taken by reserve_many."""
+        yield from self.clear(t)
+
     def enter_write(self, t: ThreadCtx, ptrs: List[int]) -> Generator:
         """NBR hook: publish reservations, end the restartable region."""
         return

@@ -118,6 +118,8 @@ class EpochPOP(SMRScheme):
     _ping_all = HazardPtrPOP._ping_all
     _wait_all_published = HazardPtrPOP._wait_all_published
     _collect_reservations = HazardPtrPOP._collect_reservations
+    # batched sessions share the fence-free local reservation path
+    reserve_many = HazardPtrPOP.reserve_many
 
     def _reclaim_hp_freeable(self, t: ThreadCtx) -> Generator:
         self.pop_reclaims += 1

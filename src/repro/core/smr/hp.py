@@ -46,6 +46,28 @@ class HazardPointers(SMRScheme):
         for s in range(self.max_hp):
             yield from t.store(self._slot(t.tid, s), NULL)
 
+    def reserve_many(self, t: ThreadCtx, ptr_addrs, decode=None) -> Generator:
+        """Batched session reserve: publish all slots, then ONE store-load
+        fence for the whole batch (vs one per read on the hot path)."""
+        while True:
+            ptrs = []
+            for i, a in enumerate(ptr_addrs):
+                p = yield from t.load(a)
+                ptrs.append(p)
+                node = decode(p) if decode else p
+                yield from t.store(self._slot(t.tid, i), node)
+            if self.fence_on_read:
+                yield from t.fence()
+            ok = True
+            for i, a in enumerate(ptr_addrs):
+                again = yield from t.load(a)
+                t.stats.reads += 1
+                if again != ptrs[i]:
+                    ok = False
+                    break
+            if ok:
+                return ptrs
+
     def retire(self, t: ThreadCtx, addr: int) -> Generator:
         t.local["retire"].append(addr)
         self._account_retire(t)

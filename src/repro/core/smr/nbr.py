@@ -74,6 +74,26 @@ class NBR(SMRScheme):
         return
         yield
 
+    def reserve_many(self, t: ThreadCtx, ptr_addrs, decode=None) -> Generator:
+        """Batched session reserve: bare loads, then publish the whole batch
+        with enter_write's single fence.  The session runs outside the
+        restartable region, so pings during it only acknowledge."""
+        ptrs = []
+        for a in ptr_addrs:
+            p = yield from t.load(a)
+            t.stats.reads += 1
+            ptrs.append(p)
+        nodes = [decode(p) if decode else p for p in ptrs]
+        yield from self.enter_write(t, nodes)
+        return ptrs
+
+    def clear_many(self, t: ThreadCtx) -> Generator:
+        if t.local["published"]:
+            for s in range(t.local["published"]):
+                yield from t.store(self._slot(t.tid, s), NULL)
+            t.local["published"] = 0
+        t.local["read_phase"] = False
+
     def handler(self, t: ThreadCtx) -> Generator:
         if t.local["read_phase"]:
             t.pending_neutralize = True   # longjmp out of the operation

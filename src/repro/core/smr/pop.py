@@ -56,6 +56,29 @@ class HazardPtrPOP(SMRScheme):
             lres[s] = NULL
         yield from t.local_op()
 
+    def reserve_many(self, t: ThreadCtx, ptr_addrs, decode=None) -> Generator:
+        """Batched session reserve: all reservations stay thread-local --
+        one cheap local op covers the batch; publication happens only if a
+        reclaimer pings (the paper's traversal-retention argument applied at
+        serving granularity)."""
+        while True:
+            lres = t.local["lres"]
+            ptrs = []
+            for i, a in enumerate(ptr_addrs):
+                p = yield from t.load(a)
+                ptrs.append(p)
+                lres[i] = decode(p) if decode else p
+            yield from t.local_op()              # NO fence, NO shared store
+            ok = True
+            for i, a in enumerate(ptr_addrs):
+                again = yield from t.load(a)
+                t.stats.reads += 1
+                if again != ptrs[i]:
+                    ok = False
+                    break
+            if ok:
+                return ptrs
+
     # ---- signal handler: Algorithm 2, publishReservations ----
 
     def handler(self, t: ThreadCtx) -> Generator:

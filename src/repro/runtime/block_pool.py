@@ -1,19 +1,21 @@
-"""EpochPOP-managed KV-cache block pool -- the paper's technique as a
-first-class feature of the serving runtime (DESIGN.md §2.3).
+"""SMR-managed KV-cache block pool -- the paper's techniques as first-class
+features of the serving runtime (DESIGN.md §2.3).
 
 Actors:
   * **engines** (readers): per-engine threads building batches out of pool
-    blocks.  An engine announces the global epoch when it starts a step
-    (EBR fast path) and tracks its *live block set* privately -- no
-    per-block refcount traffic on the scheduling hot path (the analogue of
-    HP's fence-per-READ that POP eliminates).
-  * **reclaimer**: frees blocks of finished requests.  Fast path: a block
-    retired in epoch e is freed once every engine has announced an epoch
-    > e.  If the free list is still under pressure afterwards (an engine is
-    stalled mid-step -- the EBR robustness hole), it PINGS all engines;
-    each publishes its live set at the next safe point and bumps its
-    publish counter; the reclaimer then frees everything outside the
-    published union.  No engine ever restarts or blocks on reclamation.
+    blocks.  An engine brackets each step with start_step/end_step, owns the
+    blocks it allocates, and may additionally open a *reader session* over
+    any blocks it traverses (reserve/touch/clear) -- the batched analogue of
+    the paper's per-read reservations, paid once per step instead of once
+    per block.
+  * **reclaimer**: frees blocks of finished requests.  WHEN a retired block
+    is freed is delegated to a pluggable :class:`ReclaimPolicy`
+    (runtime/reclaim.py).  The default :class:`EpochPOPPolicy` keeps the
+    historical behavior: epoch fast path, publish-on-ping fallback under
+    pressure, no engine ever restarts or blocks on reclamation.
+    :class:`SimulatedSMRPolicy` instead drives any scheme from
+    ``core/smr/registry.py`` over block addresses and turns premature frees
+    into hard :class:`UseAfterFree` errors.
 
 Host adaptation (DESIGN.md §8): CPython cannot deliver POSIX signals to a
 chosen thread, so the ping is a flag checked at engine safe points (step
@@ -24,9 +26,11 @@ async-signal semantics are exercised in core/sim.
 from __future__ import annotations
 
 import threading
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Set
+
+from repro.core.sim.engine import UseAfterFree
+from repro.runtime.reclaim import EpochPOPPolicy, ReclaimPolicy
 
 
 class OutOfBlocks(RuntimeError):
@@ -43,14 +47,24 @@ class PoolStats:
     publishes: int = 0
     free_watermark_min: int = 1 << 30
     retired_peak: int = 0
+    touches: int = 0
+    reserves: int = 0
 
 
 class BlockPool:
-    """Thread-safe paged block pool with EpochPOP reclamation."""
+    """Thread-safe paged block pool with pluggable SMR reclamation.
+
+    The pool owns the mechanism -- free list, ownership ledger
+    (``_live_local``), retired list, reader sessions, and a per-block
+    allocation-generation counter that makes use-after-free detection
+    deterministic even for real threads.  The attached policy owns the
+    decision of when retired blocks are safe to free.
+    """
 
     def __init__(self, num_blocks: int, n_engines: int,
                  reclaim_threshold: int = 32, pressure_factor: int = 2,
-                 ping_timeout_s: float = 5.0):
+                 ping_timeout_s: float = 5.0,
+                 policy: Optional[ReclaimPolicy] = None):
         self.num_blocks = num_blocks
         self.n_engines = n_engines
         self.reclaim_threshold = reclaim_threshold
@@ -59,35 +73,37 @@ class BlockPool:
 
         self._lock = threading.Lock()
         self._free: List[int] = list(range(num_blocks))
+        self._freeset: Set[int] = set(self._free)
         # (block, retire_epoch) pairs not yet freed
         self._retired: List[tuple] = []
-
-        # EBR state
         self._epoch = 1
-        self._announced = [1 << 60] * n_engines          # MAX = quiescent
+        # allocation generation per block: bumped on every allocate, so a
+        # stale session handle to a recycled block is detectable
+        self._gen = [0] * num_blocks
 
-        # POP state (per-engine, SWMR)
-        self._live_published: List[Set[int]] = [set() for _ in range(n_engines)]
-        self._publish_counter = [0] * n_engines
-        self._ping_flags = [threading.Event() for _ in range(n_engines)]
-        # engine-local live sets: engine-owned, read only by that engine's
-        # safe-point publish (the "localReservations" of the paper)
+        # engine-local live sets: engine-owned (the "localReservations" of
+        # the paper); read by the policy's safe-point publish
         self._live_local: List[Set[int]] = [set() for _ in range(n_engines)]
+        # reader sessions: block -> generation observed at reserve time
+        self._session: List[Dict[int, int]] = [dict() for _ in range(n_engines)]
 
         self.stats = PoolStats()
+        self.policy = policy or EpochPOPPolicy()
+        self.policy.attach(self)
 
     # ------------------------------------------------------------------
     # engine (reader) API
     # ------------------------------------------------------------------
 
     def start_step(self, engine: int) -> None:
-        """EBR announce: engine enters a step in the current epoch."""
-        self._announced[engine] = self._epoch
-        self.safepoint(engine)
+        """Engine enters a step (policy announce + safepoint)."""
+        self.policy.on_start_step(engine)
 
     def end_step(self, engine: int) -> None:
-        self._announced[engine] = 1 << 60
-        self.safepoint(engine)
+        """Engine leaves a step: the reader session ends implicitly."""
+        if self._session[engine]:
+            self.clear_session(engine)
+        self.policy.on_end_step(engine)
 
     def allocate(self, engine: int, n: int) -> List[int]:
         """Allocate n blocks into the engine's private live set (no global
@@ -96,10 +112,14 @@ class BlockPool:
             if len(self._free) < n:
                 raise OutOfBlocks(f"need {n}, have {len(self._free)}")
             blocks = [self._free.pop() for _ in range(n)]
+            for b in blocks:
+                self._freeset.discard(b)
+                self._gen[b] += 1
             self.stats.allocated += n
             self.stats.free_watermark_min = min(self.stats.free_watermark_min,
                                                 len(self._free))
         self._live_local[engine].update(blocks)
+        self.policy.on_allocate(engine, blocks)
         return blocks
 
     def release_local(self, engine: int, blocks: Sequence[int]) -> None:
@@ -109,16 +129,44 @@ class BlockPool:
 
     def safepoint(self, engine: int) -> None:
         """Bounded-time ping delivery point: publish-on-ping."""
-        ev = self._ping_flags[engine]
-        if ev.is_set():
-            self._publish(engine)
-            ev.clear()
+        self.policy.safepoint(engine)
 
-    def _publish(self, engine: int) -> None:
-        # copy-then-publish: the set swap is atomic under the GIL
-        self._live_published[engine] = set(self._live_local[engine])
-        self._publish_counter[engine] += 1
-        self.stats.publishes += 1
+    # ---- reader sessions (batched reserve-many / clear-many) ----
+
+    def reserve(self, engine: int, blocks: Sequence[int]) -> None:
+        """Open/extend this engine's reader session over ``blocks``: the
+        engine may touch them until clear_session/end_step, and the policy
+        must keep them allocated even if their owner retires them."""
+        with self._lock:
+            ses = self._session[engine]
+            for b in blocks:
+                ses[b] = self._gen[b]
+        self.stats.reserves += 1
+        self.policy.on_reserve(engine, list(self._session[engine]))
+
+    def touch(self, engine: int, blocks: Sequence[int]) -> None:
+        """Assert the engine may still use ``blocks``; raises
+        :class:`UseAfterFree` if any was freed or recycled under it.
+        Touching a block that is neither owned nor session-reserved is
+        itself the bug class SMR prevents (an unprotected access that a
+        recycle would silently corrupt), so it raises too."""
+        ses = self._session[engine]
+        own = self._live_local[engine]
+        with self._lock:
+            for b in blocks:
+                g = ses.get(b)
+                if g is not None:
+                    if b in self._freeset or self._gen[b] != g:
+                        raise UseAfterFree(engine, b, "touch")
+                elif b not in own:
+                    raise UseAfterFree(engine, b, "unreserved-touch")
+        self.stats.touches += 1
+        self.policy.touch(engine, blocks)
+
+    def clear_session(self, engine: int) -> None:
+        with self._lock:
+            self._session[engine] = {}
+        self.policy.on_clear_session(engine)
 
     # ------------------------------------------------------------------
     # reclaimer API
@@ -132,77 +180,28 @@ class BlockPool:
             self._retired.extend((b, e) for b in blocks)
             self.stats.retired_peak = max(self.stats.retired_peak,
                                           len(self._retired))
-            over = len(self._retired) >= self.reclaim_threshold
-        if over:
-            self.reclaim(engine)
+        self.policy.on_retire(engine, blocks)
 
     def bump_epoch(self) -> None:
         with self._lock:
             self._epoch += 1
 
     def reclaim(self, engine: Optional[int] = None) -> int:
-        """Epoch fast path; POP fallback under pressure.  Returns # freed.
+        """Ask the policy for a reclamation pass.  Returns # blocks freed."""
+        return self.policy.reclaim(engine)
 
-        ``engine``: the calling engine's id (paper: pingAllToPublish skips
-        self -- a reclaimer reads its own reservations directly and must not
-        wait for its own publish counter)."""
-        self.bump_epoch()
-        freed = self._reclaim_epoch()
-        with self._lock:
-            pressure = len(self._retired) >= (self.pressure_factor
-                                              * self.reclaim_threshold)
-        if pressure:
-            freed += self._reclaim_pop(engine)
-        return freed
-
-    def _reclaim_epoch(self) -> int:
-        min_epoch = min(self._announced)
+    def _return_blocks_if(self, pred: Callable[[int, int], bool]) -> int:
+        """Policy callback: free every retired (block, epoch) with
+        ``pred(block, epoch)`` true.  Returns the number freed."""
         with self._lock:
             keep, free_now = [], []
             for b, e in self._retired:
-                (free_now if e < min_epoch else keep).append((b, e))
+                (free_now if pred(b, e) else keep).append((b, e))
             self._retired = keep
             for b, _ in free_now:
                 self._free.append(b)
+                self._freeset.add(b)
             self.stats.freed += len(free_now)
-            if free_now:
-                self.stats.epoch_reclaims += 1
-        return len(free_now)
-
-    def _reclaim_pop(self, engine: Optional[int] = None) -> int:
-        """Ping all OTHER engines, wait for publishes, free the complement;
-        the caller's own live set is read directly (paper Alg. 2 line 37)."""
-        self.stats.pings += 1
-        snap = list(self._publish_counter)
-        others = [i for i in range(self.n_engines) if i != engine]
-        for i in others:
-            self._ping_flags[i].set()
-        deadline = time.monotonic() + self.ping_timeout_s
-        pending = set(others)
-        while pending and time.monotonic() < deadline:
-            pending = {i for i in pending
-                       if self._publish_counter[i] <= snap[i]}
-            if pending:
-                time.sleep(0.0005)
-        if pending:
-            # Assumption 1 violated (engine died?): stay safe, free nothing
-            # beyond what epochs allow.
-            return 0
-        reserved: Set[int] = set()
-        for i in others:
-            reserved |= self._live_published[i]
-        if engine is not None:
-            reserved |= set(self._live_local[engine])
-        with self._lock:
-            keep, free_now = [], []
-            for b, e in self._retired:
-                (free_now if b not in reserved else keep).append((b, e))
-            self._retired = keep
-            for b, _ in free_now:
-                self._free.append(b)
-            self.stats.freed += len(free_now)
-            if free_now:
-                self.stats.pop_reclaims += 1
         return len(free_now)
 
     # ------------------------------------------------------------------

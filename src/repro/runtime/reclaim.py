@@ -1,0 +1,400 @@
+"""Pluggable block-reclamation policies for the paged serving runtime.
+
+The :class:`~repro.runtime.block_pool.BlockPool` owns the *mechanism* (free
+list, ownership ledger, retired list, reader sessions); a ``ReclaimPolicy``
+owns the *decision* of when a retired block is safe to hand back.  Three
+families ship here:
+
+* :class:`EpochPOPPolicy` -- the native real-thread adaptation of the paper's
+  EpochPOP (Algorithm 3): epoch fast path, publish-on-ping fallback under
+  pressure.  This is the default and preserves the pool's historical
+  behavior bit-for-bit.
+* :class:`SimulatedSMRPolicy` -- plugs **any** scheme from
+  ``repro.core.smr.registry`` (HP, HPAsym, HE, EBR, IBR, NBR+, HazardPtrPOP,
+  HazardEraPOP, EpochPOP, ...) into the pool by mirroring every block as a
+  node on the discrete-event simulator.  Real engine threads drive the
+  scheme's generators synchronously (``Engine.drive``); the simulator's
+  instrumented allocator turns any premature free into a hard
+  :class:`UseAfterFree` (recycling disabled, so detection is deterministic).
+* :class:`UnsafeEagerPolicy` -- frees retired blocks immediately, ignoring
+  reader sessions.  Exists so the litmus tests can demonstrate that the
+  tripwires actually fire for the bug class SMR prevents.
+
+Every policy sees the same seam:
+
+    attach(pool)                    -- wire up, allocate side state
+    on_start_step / on_end_step     -- engine step brackets (EBR announce)
+    safepoint(engine)               -- bounded-time ping delivery point
+    on_allocate / on_retire         -- ownership transitions
+    on_reserve / on_clear_session   -- batched reader sessions (reserve-many)
+    touch(engine, blocks)           -- scheme-level use-after-free tripwire
+    reclaim(engine) -> freed        -- explicit scan (OutOfBlocks pressure)
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Set
+
+from repro.core.sim.engine import Allocator, Costs, Engine, UseAfterFree
+
+MAX_EPOCH = 1 << 60
+
+
+class ReclaimPolicy:
+    """Base seam: no-op hooks, pool-agnostic."""
+
+    name = "base"
+
+    def __init__(self) -> None:
+        self.pool = None  # set by attach()
+
+    def attach(self, pool) -> None:
+        self.pool = pool
+
+    # -- engine step brackets / ping delivery --
+
+    def on_start_step(self, engine: int) -> None:
+        pass
+
+    def on_end_step(self, engine: int) -> None:
+        pass
+
+    def safepoint(self, engine: int) -> None:
+        pass
+
+    # -- ownership --
+
+    def on_allocate(self, engine: int, blocks: Sequence[int]) -> None:
+        pass
+
+    def on_retire(self, engine: int, blocks: Sequence[int]) -> None:
+        pass
+
+    # -- reader sessions --
+
+    def on_reserve(self, engine: int, session: Sequence[int]) -> None:
+        pass
+
+    def on_clear_session(self, engine: int) -> None:
+        pass
+
+    def touch(self, engine: int, blocks: Sequence[int]) -> None:
+        pass
+
+    # -- reclamation --
+
+    def reclaim(self, engine: Optional[int] = None) -> int:
+        return 0
+
+    def flush(self) -> int:
+        """Drain everything reclaimable at shutdown (best effort)."""
+        return self.reclaim(None)
+
+
+class EpochPOPPolicy(ReclaimPolicy):
+    """The paper's EpochPOP adapted to real threads (DESIGN.md §2.3/§8).
+
+    Fast path: a block retired in epoch e is freed once every engine has
+    announced an epoch > e.  Under pressure (an engine stalled mid-step),
+    the reclaimer PINGS all engines; each publishes its live+session set at
+    the next safe point; the reclaimer frees the complement.  CPython cannot
+    deliver POSIX signals to a chosen thread, so the ping is a flag checked
+    at engine safe points; delivery is bounded because steps are bounded.
+    """
+
+    name = "EpochPOP"
+
+    def __init__(self, ping_timeout_s: Optional[float] = None) -> None:
+        super().__init__()
+        self._ping_timeout_s = ping_timeout_s
+
+    def attach(self, pool) -> None:
+        super().attach(pool)
+        n = pool.n_engines
+        if self._ping_timeout_s is None:
+            self._ping_timeout_s = pool.ping_timeout_s
+        self._announced = [MAX_EPOCH] * n               # MAX = quiescent
+        # POP state (per-engine, SWMR)
+        self._live_published: List[Set[int]] = [set() for _ in range(n)]
+        self._publish_counter = [0] * n
+        self._ping_flags = [threading.Event() for _ in range(n)]
+
+    # -- reader side --
+
+    def on_start_step(self, engine: int) -> None:
+        self._announced[engine] = self.pool._epoch
+        self.safepoint(engine)
+
+    def on_end_step(self, engine: int) -> None:
+        self._announced[engine] = MAX_EPOCH
+        self.safepoint(engine)
+
+    def safepoint(self, engine: int) -> None:
+        """Bounded-time ping delivery point: publish-on-ping."""
+        ev = self._ping_flags[engine]
+        if ev.is_set():
+            self._publish(engine)
+            ev.clear()
+
+    def _publish(self, engine: int) -> None:
+        # copy-then-publish: the set swap is atomic under the GIL
+        pool = self.pool
+        self._live_published[engine] = (
+            set(pool._live_local[engine]) | set(pool._session[engine]))
+        self._publish_counter[engine] += 1
+        pool.stats.publishes += 1
+
+    # -- reclaimer side --
+
+    def on_retire(self, engine: int, blocks: Sequence[int]) -> None:
+        with self.pool._lock:
+            over = len(self.pool._retired) >= self.pool.reclaim_threshold
+        if over:
+            self.reclaim(engine)
+
+    def reclaim(self, engine: Optional[int] = None) -> int:
+        """Epoch fast path; POP fallback under pressure.  Returns # freed.
+
+        ``engine``: the calling engine's id (paper: pingAllToPublish skips
+        self -- a reclaimer reads its own reservations directly and must not
+        wait for its own publish counter)."""
+        pool = self.pool
+        pool.bump_epoch()
+        freed = self._reclaim_epoch()
+        with pool._lock:
+            pressure = len(pool._retired) >= (pool.pressure_factor
+                                              * pool.reclaim_threshold)
+        if pressure:
+            freed += self._reclaim_pop(engine)
+        return freed
+
+    def _reclaim_epoch(self) -> int:
+        pool = self.pool
+        min_epoch = min(self._announced)
+        freed = pool._return_blocks_if(lambda b, e: e < min_epoch)
+        if freed:
+            pool.stats.epoch_reclaims += 1
+        return freed
+
+    def _reclaim_pop(self, engine: Optional[int] = None) -> int:
+        """Ping all OTHER engines, wait for publishes, free the complement;
+        the caller's own live set is read directly (paper Alg. 2 line 37)."""
+        pool = self.pool
+        pool.stats.pings += 1
+        snap = list(self._publish_counter)
+        others = [i for i in range(pool.n_engines) if i != engine]
+        for i in others:
+            self._ping_flags[i].set()
+        deadline = time.monotonic() + self._ping_timeout_s
+        pending = set(others)
+        while pending and time.monotonic() < deadline:
+            pending = {i for i in pending
+                       if self._publish_counter[i] <= snap[i]}
+            if pending:
+                time.sleep(0.0005)
+        if pending:
+            # Assumption 1 violated (engine died?): stay safe, free nothing
+            # beyond what epochs allow.
+            return 0
+        reserved: Set[int] = set()
+        for i in others:
+            reserved |= self._live_published[i]
+        if engine is not None:
+            reserved |= set(pool._live_local[engine])
+            reserved |= set(pool._session[engine])
+        freed = pool._return_blocks_if(lambda b, e: b not in reserved)
+        if freed:
+            pool.stats.pop_reclaims += 1
+        return freed
+
+
+class UnsafeEagerPolicy(ReclaimPolicy):
+    """DELIBERATELY BROKEN: frees retired blocks immediately, ignoring every
+    reservation.  A reader session holding a retired block will observe
+    :class:`UseAfterFree` on its next touch -- exactly the bug class the SMR
+    policies exist to prevent.  Test/demo only."""
+
+    name = "unsafe-eager"
+
+    def on_retire(self, engine: int, blocks: Sequence[int]) -> None:
+        self.pool._return_blocks_if(lambda b, e: True)
+
+    def reclaim(self, engine: Optional[int] = None) -> int:
+        return self.pool._return_blocks_if(lambda b, e: True)
+
+
+class SimulatedSMRPolicy(ReclaimPolicy):
+    """Drive any registry SMR scheme over block addresses.
+
+    Every pool block is mirrored by a one-cell node on the discrete-event
+    simulator; a shared *block table* cell per block holds the current node
+    address (exactly the indirection the serving block table provides).  Real
+    engine threads map 1:1 onto simulated threads and drive the scheme's
+    generators synchronously under a policy-wide lock (``Engine.drive``);
+    signals are delivered inline, which realizes the paper's Assumption 1
+    with zero scheduling delay.
+
+    Safety instrumentation: address recycling is disabled in the simulated
+    allocator, so the node of a freed block stays in the FREED state forever
+    and **any** stale touch raises :class:`UseAfterFree` deterministically.
+    """
+
+    name = "sim-smr"
+
+    def __init__(self, scheme: str = "HazardPtrPOP", *, seed: int = 0,
+                 reclaim_freq: Optional[int] = None, epoch_freq: int = 4,
+                 costs: Optional[Costs] = None) -> None:
+        super().__init__()
+        self.scheme_name = scheme
+        self.seed = seed
+        self.reclaim_freq = reclaim_freq
+        self.epoch_freq = epoch_freq
+        self.costs = costs
+        self.name = f"sim-{scheme}"
+
+    def attach(self, pool) -> None:
+        from repro.core.smr.registry import make_scheme
+
+        super().attach(pool)
+        n = pool.n_engines
+        self.sim = Engine(n, costs=self.costs, seed=self.seed)
+        self.sim.mem.alloc.recycle = False      # deterministic UAF tripwire
+        # a session may reserve every block in the pool
+        self.smr = make_scheme(
+            self.scheme_name, self.sim, max_hp=pool.num_blocks,
+            reclaim_freq=self.reclaim_freq or pool.reclaim_threshold,
+            epoch_freq=self.epoch_freq)
+        self.sim.set_signal_handler(self.smr.handler)
+        for t in self.sim.threads:
+            self.smr.thread_init(t)
+        self.table = self.sim.alloc_shared(pool.num_blocks)  # block -> node ptr
+        self._node_of: Dict[int, int] = {}
+        self._retired_nodes: Dict[int, int] = {}             # node -> block
+        self._mtx = threading.RLock()                        # serializes drives
+
+    # -- step brackets --
+
+    def on_start_step(self, engine: int) -> None:
+        with self._mtx:
+            t = self.sim.threads[engine]
+            self.sim.drive(engine, self.smr.start_op(t))
+
+    def on_end_step(self, engine: int) -> None:
+        with self._mtx:
+            t = self.sim.threads[engine]
+            self.sim.drive(engine, self.smr.end_op(t))
+            self._collect_freed()
+
+    # -- ownership --
+
+    def on_allocate(self, engine: int, blocks: Sequence[int]) -> None:
+        with self._mtx:
+            t = self.sim.threads[engine]
+            for b in blocks:
+                addr = self.sim.drive(engine, self.smr.alloc_node(t, 1))
+                self._node_of[b] = addr
+                self.sim.drive(engine, t.atomic_store(self.table + b, addr))
+
+    def on_retire(self, engine: int, blocks: Sequence[int]) -> None:
+        with self._mtx:
+            t = self.sim.threads[engine]
+            for b in blocks:
+                addr = self._node_of[b]
+                self._retired_nodes[addr] = b
+                self.sim.drive(engine, self.smr.retire(t, addr))
+            self._collect_freed()
+
+    # -- reader sessions (the batched reserve-many path) --
+
+    def on_reserve(self, engine: int, session: Sequence[int]) -> None:
+        with self._mtx:
+            t = self.sim.threads[engine]
+            addrs = [self.table + b for b in sorted(session)]
+            self.sim.drive(engine, self.smr.reserve_many(t, addrs))
+
+    def on_clear_session(self, engine: int) -> None:
+        with self._mtx:
+            t = self.sim.threads[engine]
+            self.sim.drive(engine, self.smr.clear_many(t))
+
+    def touch(self, engine: int, blocks: Sequence[int]) -> None:
+        with self._mtx:
+            t = self.sim.threads[engine]
+            for b in blocks:
+                addr = self._node_of.get(b)
+                if addr is None:
+                    raise UseAfterFree(engine, b, "touch")
+                # the load IS the check: freed node cells raise in the sim
+                self.sim.drive(engine, t.load(addr))
+
+    # -- reclamation --
+
+    def reclaim(self, engine: Optional[int] = None) -> int:
+        with self._mtx:
+            before = self.pool.stats.freed
+            tids = range(self.pool.n_engines) if engine is None else [engine]
+            for tid in tids:
+                t = self.sim.threads[tid]
+                self.sim.drive(tid, self.smr.flush(t))
+            self._collect_freed()
+            return self.pool.stats.freed - before
+
+    def flush(self) -> int:
+        return self.reclaim(None)
+
+    # -- plumbing --
+
+    def _collect_freed(self) -> None:
+        """Blocks whose sim node reached FREED go back to the pool."""
+        state = self.sim.mem.state
+        done = [a for a in self._retired_nodes if state[a] == Allocator.FREED]
+        if done:
+            blocks = set()
+            for a in done:
+                b = self._retired_nodes.pop(a)
+                blocks.add(b)
+                if self._node_of.get(b) == a:
+                    del self._node_of[b]
+            self.pool._return_blocks_if(lambda b, e: b in blocks)
+        self._sync_stats()
+
+    def _sync_stats(self) -> None:
+        s = self.pool.stats
+        s.pings = sum(t.stats.signals_sent for t in self.sim.threads)
+        s.publishes = sum(t.stats.publishes for t in self.sim.threads)
+        s.epoch_reclaims = getattr(self.smr, "epoch_reclaims",
+                                   self.smr.reclaim_calls)
+        s.pop_reclaims = getattr(self.smr, "pop_reclaims", 0)
+
+    @property
+    def unreclaimed(self) -> int:
+        """Retired-but-unfreed blocks the scheme is still holding."""
+        return len(self._retired_nodes)
+
+
+#: schemes that are safe to plug into the pool (HP-broken is a deliberately
+#: unsafe demo of the simulator's bug-finding power; NR leaks by design but
+#: never frees early, so it stays in the safe set)
+def supported_schemes() -> List[str]:
+    from repro.core.smr.registry import SCHEMES
+    return [s for s in SCHEMES if s != "HP-broken"]
+
+
+def make_policy(name: Optional[str], **kw) -> ReclaimPolicy:
+    """'EpochPOP-pool'/None -> native policy; 'unsafe' -> the broken demo;
+    any registry scheme name -> SimulatedSMRPolicy over that scheme."""
+    if name in (None, "", "EpochPOP-pool", "pool"):
+        return EpochPOPPolicy()
+    if name in ("unsafe", "unsafe-eager"):
+        return UnsafeEagerPolicy()
+    safe = supported_schemes()
+    if name not in safe:
+        # HP-broken exists in the registry as a simulator demo but must not
+        # resolve here: it is unsafe by construction.  Tests that want it
+        # can build SimulatedSMRPolicy("HP-broken") directly.
+        raise ValueError(
+            f"unknown or unsafe SMR scheme {name!r}; choose from "
+            f"EpochPOP-pool, unsafe, {', '.join(safe)}")
+    return SimulatedSMRPolicy(name, **kw)

@@ -1,10 +1,15 @@
 """Serving engine: continuous batching over a paged KV cache whose blocks
-are reclaimed by the EpochPOP pool (runtime/block_pool.py).
+are reclaimed through the pluggable SMR layer (runtime/block_pool.py +
+runtime/reclaim.py).
 
 Small-model CPU path used by examples/ and tests; the same block-table
 layout feeds the Pallas paged_attention kernel on TPU.  The engine thread is
-a POP *reader*: it holds block references privately per in-flight request
-and only publishes them when the reclaimer pings.
+an SMR *reader*: each decode step opens a reader session over the blocks of
+every in-flight request (one batched reserve, not one fence per block) and
+touches them as it decodes; the attached ReclaimPolicy guarantees none is
+freed or recycled underneath.  With the default EpochPOP policy the engine
+holds block references privately and only publishes them when the reclaimer
+pings; with ``smr=<scheme>`` any registry scheme guards the same hot path.
 """
 
 from __future__ import annotations
@@ -64,14 +69,18 @@ class ServeEngine:
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
                  page_size: int = 16, num_pages: int = 256,
-                 max_seq: int = 256, pool: Optional[BlockPool] = None):
+                 max_seq: int = 256, pool: Optional[BlockPool] = None,
+                 smr: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.page = page_size
         self.max_seq = max_seq
-        self.pool = pool or BlockPool(num_pages, n_engines=1,
-                                      reclaim_threshold=16)
+        if pool is None:
+            from repro.runtime.reclaim import make_policy
+            pool = BlockPool(num_pages, n_engines=1, reclaim_threshold=16,
+                             policy=make_policy(smr))
+        self.pool = pool
         self.engine_id = 0
         self.queue: "queue.Queue[Request]" = queue.Queue()
         self.running: Dict[int, Request] = {}
@@ -79,6 +88,7 @@ class ServeEngine:
         self._stop = threading.Event()
         self._rid = 0
         self.steps = 0
+        self.error: Optional[BaseException] = None
         self._decode = jax.jit(
             lambda p, c, t: apply_model(p, t, cfg=cfg, mode="decode", cache=c))
         self._thread: Optional[threading.Thread] = None
@@ -89,7 +99,17 @@ class ServeEngine:
         self._rid += 1
         r = Request(self._rid, prompt, max_new)
         self.queue.put(r)
+        if self.error is not None:
+            # engine already failed: it will never drain the queue again
+            self._drain_queue()
         return r
+
+    def _drain_queue(self):
+        while True:
+            try:
+                self.queue.get_nowait().done.set()
+            except queue.Empty:
+                return
 
     def start(self):
         self._thread = threading.Thread(target=self._loop, daemon=True)
@@ -112,7 +132,7 @@ class ServeEngine:
                 n_blocks = (len(r.prompt) + r.max_new + self.page - 1) // self.page
                 r.blocks = self.pool.allocate(self.engine_id, n_blocks)
             except OutOfBlocks:
-                self.pool.reclaim()
+                self.pool.reclaim(self.engine_id)
                 try:
                     r.blocks = self.pool.allocate(self.engine_id, n_blocks)
                 except OutOfBlocks:
@@ -133,8 +153,14 @@ class ServeEngine:
         if not self.running:
             time.sleep(0.001)
             return
+        # one batched reader session over the whole step's working set: the
+        # paper's traversal-retention argument at serving granularity (one
+        # publish on ping instead of a fence per block)
+        session = [b for r in self.running.values() for b in r.blocks]
+        self.pool.reserve(self.engine_id, session)
         finished = []
         for rid, r in list(self.running.items()):
+            self.pool.touch(self.engine_id, r.blocks)    # UAF tripwire
             cache = self._caches[rid]
             last = r.out[-1] if r.out else r.prompt[-1]
             tok = jnp.asarray([[last]], jnp.int32)
@@ -147,14 +173,22 @@ class ServeEngine:
         for rid in finished:
             r = self.running.pop(rid)
             del self._caches[rid]
-            self.pool.retire(self.engine_id, r.blocks)   # -> POP reclamation
+            self.pool.retire(self.engine_id, r.blocks)   # -> SMR reclamation
             r.blocks = []
             r.done.set()
         self.steps += 1
 
     def _loop(self):
-        while not self._stop.is_set():
-            self.pool.start_step(self.engine_id)   # EBR announce + safepoint
-            self._admit()
-            self._step()
-            self.pool.end_step(self.engine_id)
+        try:
+            while not self._stop.is_set():
+                self.pool.start_step(self.engine_id)   # policy announce + safepoint
+                self._admit()
+                self._step()
+                self.pool.end_step(self.engine_id)     # closes the reader session
+        except BaseException as e:  # noqa: BLE001 -- UseAfterFree et al.
+            # fail FAST: record the error and release every waiter instead of
+            # dying silently and leaving clients to hit done.wait timeouts
+            self.error = e
+            for r in list(self.running.values()):
+                r.done.set()
+            self._drain_queue()

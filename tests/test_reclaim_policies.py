@@ -1,0 +1,151 @@
+"""Block-pool reclamation-policy litmus tests (the ReclaimPolicy seam).
+
+The contract under test, at high eviction pressure:
+
+1. an intentionally unsafe policy (free-on-retire, reservations ignored)
+   MUST surface :class:`UseAfterFree` as a hard error the moment a reader
+   session touches a freed/recycled block;
+2. every registered SMR scheme plugged in via
+   :class:`SimulatedSMRPolicy` must NEVER produce a use-after-free, even
+   when readers hold sessions across retires of the very blocks they
+   reserved (KV prefix sharing);
+3. safe schemes actually reclaim (no de-facto leak disguised as safety),
+   and the pool's block accounting stays exact.
+"""
+
+import pytest
+
+from repro.core.sim.engine import UseAfterFree
+from repro.runtime.block_pool import OutOfBlocks
+from repro.core.smr.registry import SCHEMES
+from repro.runtime.block_pool import BlockPool
+from repro.runtime.reclaim import (EpochPOPPolicy, SimulatedSMRPolicy,
+                                   UnsafeEagerPolicy, make_policy,
+                                   supported_schemes)
+
+SAFE_SCHEMES = supported_schemes()
+
+
+def churn(pool: BlockPool, *, steps: int = 60, per_req: int = 2,
+          window: int = 3) -> None:
+    """Single-engine serving protocol: allocate, reserve+touch the working
+    set, retire the oldest request -- deterministic, high pressure."""
+    live = []
+    for _ in range(steps):
+        pool.start_step(0)
+        try:
+            blocks = pool.allocate(0, per_req)
+            live.append(blocks)
+        except OutOfBlocks:
+            # leaky (NR) or pinned (EBR under an open session) schemes hit
+            # exhaustion -- the engine protocol reclaims and keeps stepping
+            pool.reclaim(0)
+            pool.end_step(0)
+            continue
+        session = [b for req in live for b in req]
+        pool.reserve(0, session)
+        pool.touch(0, session)
+        if len(live) > window:
+            pool.retire(0, live.pop(0))
+        pool.end_step(0)
+    for req in live:
+        pool.retire(0, req)
+
+
+def test_supported_schemes_excludes_broken():
+    assert "HP-broken" in SCHEMES and "HP-broken" not in SAFE_SCHEMES
+    assert set(SAFE_SCHEMES) <= set(SCHEMES)
+
+
+def test_unsafe_policy_fires_use_after_free():
+    """Reader session holds blocks; owner retires them; the eager policy
+    frees instantly; the reader's next touch must be a hard error."""
+    pool = BlockPool(16, n_engines=2, reclaim_threshold=4,
+                     policy=UnsafeEagerPolicy())
+    shared = pool.allocate(0, 2)
+    pool.start_step(1)
+    pool.reserve(1, shared)
+    pool.touch(1, shared)            # fine: still live
+    pool.retire(0, shared)           # unsafe free while session open
+    with pytest.raises(UseAfterFree):
+        pool.touch(1, shared)
+
+
+def test_unsafe_policy_detects_recycled_block():
+    """Freed-then-reallocated blocks (ABA) are caught via the allocation
+    generation, not just the free list."""
+    pool = BlockPool(4, n_engines=2, reclaim_threshold=2,
+                     policy=UnsafeEagerPolicy())
+    shared = pool.allocate(0, 2)
+    pool.start_step(1)
+    pool.reserve(1, shared)
+    pool.retire(0, shared)
+    # recycle the same physical blocks into a new request
+    again = pool.allocate(0, 2)
+    assert set(again) & set(shared), "LIFO free list should recycle"
+    with pytest.raises(UseAfterFree):
+        pool.touch(1, shared)
+
+
+@pytest.mark.parametrize("scheme", SAFE_SCHEMES)
+def test_smr_scheme_never_fires_uaf_under_pressure(scheme):
+    """Cross-engine sharing + eviction churn: no touch may ever fail."""
+    pool = BlockPool(64, n_engines=2, reclaim_threshold=4, pressure_factor=1,
+                     policy=SimulatedSMRPolicy(scheme))
+    shared = pool.allocate(0, 2)
+    pool.start_step(1)
+    pool.reserve(1, shared)
+    churn(pool, steps=60)            # engine 0 churns hard
+    pool.touch(1, shared)            # session must still protect these
+    pool.retire(0, shared)           # owner retires under the open session
+    pool.touch(1, shared)            # STILL protected
+    pool.end_step(1)                 # session closes -> now reclaimable
+    pool.start_step(0)
+    pool.end_step(0)                 # epoch schemes need a later quiescent step
+    pool.reclaim()
+    assert pool.check_no_leaks()
+    if scheme != "NR":
+        assert pool.stats.freed > 0, "safe scheme never reclaimed anything"
+        assert pool.retired_blocks <= 4 * pool.reclaim_threshold, \
+            "garbage not bounded after flush"
+
+
+def test_epoch_pop_policy_matches_legacy_default():
+    """The default policy is the native EpochPOP adaptation."""
+    pool = BlockPool(64, n_engines=1, reclaim_threshold=4)
+    assert isinstance(pool.policy, EpochPOPPolicy)
+    churn(pool)
+    pool.reclaim()
+    assert pool.stats.freed > 0
+    assert pool.check_no_leaks()
+
+
+def test_touch_without_reservation_on_freed_block_raises():
+    pool = BlockPool(8, n_engines=1, reclaim_threshold=1, pressure_factor=1)
+    b = pool.allocate(0, 2)
+    pool.retire(0, b)
+    pool.reclaim()                   # quiescent: blocks freed
+    assert pool.stats.freed == 2
+    with pytest.raises(UseAfterFree):
+        pool.touch(0, b)
+
+
+def test_make_policy_resolution():
+    assert isinstance(make_policy(None), EpochPOPPolicy)
+    assert isinstance(make_policy("EpochPOP-pool"), EpochPOPPolicy)
+    assert isinstance(make_policy("unsafe"), UnsafeEagerPolicy)
+    p = make_policy("HazardEraPOP")
+    assert isinstance(p, SimulatedSMRPolicy)
+    assert p.scheme_name == "HazardEraPOP"
+
+
+def test_sim_policy_reports_scheme_stats():
+    """Pings/publishes from the simulated scheme surface in pool stats."""
+    pool = BlockPool(32, n_engines=2, reclaim_threshold=2, pressure_factor=1,
+                     policy=SimulatedSMRPolicy("HazardPtrPOP"))
+    churn(pool, steps=40)
+    pool.reclaim()
+    assert pool.stats.freed > 0
+    assert pool.stats.pings > 0      # POP reclaims pinged the peer engine
+    assert pool.stats.publishes > 0  # which published on ping
+    assert pool.check_no_leaks()

@@ -9,7 +9,12 @@
 
 import random
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional [dev] extra "
+    "(pip install -e '.[dev]')")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.sim.engine import Costs
 from repro.core.smr.registry import PAPER_SET
