@@ -7,7 +7,6 @@ from __future__ import annotations
 import contextlib
 import io
 import json
-import sys
 from pathlib import Path
 
 
@@ -71,9 +70,10 @@ def main() -> None:
                    f"{1e6/max(r['steps_per_s'],1e-9):.2f},"
                    f"steps_per_s={r['steps_per_s']:.0f}")
 
-    # -- framework: serving-side reclamation grid (scheme x threads x pressure) --
+    # -- framework: serving-side reclamation grid (scheme x engines x pressure
+    #    + the shared-prefix allocation comparison) --
     from benchmarks.serve_reclaim import QUICK_SCHEMES, run_grid, to_csv
-    sr = _quiet(run_grid, schemes=QUICK_SCHEMES, threads=(1, 2),
+    sr = _quiet(run_grid, schemes=QUICK_SCHEMES, engines=(1, 2),
                 pressures=("high",), duration=0.2)
     csv.extend(to_csv(sr))
     Path("results/serve_reclaim.json").write_text(json.dumps(sr, indent=1))

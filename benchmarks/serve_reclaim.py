@@ -1,27 +1,42 @@
-"""Serving-side reclamation grid: scheme x engine-threads x eviction
-pressure over the SMR-managed block pool (runtime/reclaim.py).
+"""Serving-side reclamation grid: scheme x engines x eviction pressure over
+the SMR-managed block pool, with a dedicated reclaimer thread and an
+optional shared-prefix workload (runtime/block_pool.py + runtime/reclaim.py
++ serve/worker.py).
 
 Each engine thread runs the serving runtime's block protocol without the
-model math: start_step -> allocate -> batched reserve over its working set
--> touch every reserved block (the use-after-free tripwire) -> retire the
-oldest request -> end_step.  "high" pressure shrinks the pool so reclamation
-runs constantly; "low" gives it slack.  The robustness metric is
-**peak-unreclaimed-blocks** (pool.stats.retired_peak): how much dead memory
-a scheme let pile up -- the paper's garbage-bound axis transplanted to the
-serving runtime.
+model math: start_step -> allocate (or acquire a prefix-shared block run)
+-> batched reserve over its working set -> touch every reserved block (the
+use-after-free tripwire) -> retire/release the oldest request -> end_step.
+A first-class Reclaimer thread owns its own engine id and retires/frees
+through the pluggable policy, so publish-on-ping passes fan out to all N
+engines concurrently -- the paper's multi-reader signal-cost scenario.
 
-    PYTHONPATH=src python benchmarks/serve_reclaim.py [--quick]
+Workloads:
+  * ``private``       -- every request owns all its blocks (the PR-1 grid);
+  * ``shared-prefix`` -- requests draw a prompt prefix from a small hot set;
+    with ``prefix_cache=True`` the prefix blocks come from the pool's
+    content-keyed cache (refcounted, retired -- not freed -- on last drop)
+    instead of fresh allocations.  The cache-off twin of each cell is the
+    no-sharing baseline the acceptance criteria compare against.
+
+Metrics: **peak-unreclaimed-blocks** (pool.stats.retired_peak, the paper's
+garbage-bound axis) and **per-engine throughput** (steps/s min/mean across
+engines -- fairness under ping fan-out), plus blocks allocated per request
+for the sharing comparison.
+
+    PYTHONPATH=src python benchmarks/serve_reclaim.py [--quick] [--engines 2]
 
 CSV schema (matched to benchmarks/run.py): ``name,us_per_call,derived``
-where name = serve_reclaim:<scheme>:t<threads>:<pressure>, us_per_call is
-wall microseconds per engine step, and derived packs
-peak_unreclaimed/freed/pings/publishes/uaf.
+where name = serve_reclaim:<scheme>:e<engines>:<pressure>[:shared[+cache]],
+us_per_call is wall microseconds per engine step, and derived packs
+peak_unreclaimed/freed/pings/publishes/alloc_per_req/uaf.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import random
 import threading
 import time
 from pathlib import Path
@@ -29,6 +44,7 @@ from pathlib import Path
 from repro.core.sim.engine import UseAfterFree
 from repro.runtime.block_pool import BlockPool, OutOfBlocks
 from repro.runtime.reclaim import make_policy
+from repro.serve.worker import Reclaimer
 
 # native EpochPOP pool + a representative slice of the registry
 DEFAULT_SCHEMES = ("EpochPOP-pool", "HP", "HE", "EBR", "NBR+",
@@ -36,40 +52,71 @@ DEFAULT_SCHEMES = ("EpochPOP-pool", "HP", "HE", "EBR", "NBR+",
 QUICK_SCHEMES = ("EpochPOP-pool", "HazardPtrPOP", "EpochPOP")
 
 PRESSURE = {"low": 48, "high": 16}     # pool blocks per engine thread
+N_PREFIXES = 4                         # hot prefix set for shared workload
+PREFIX_BLOCKS = 2                      # blocks per shared prefix
+PRIVATE_BLOCKS = 2                     # private blocks per shared-wl request
 
 
 def run_one(scheme: str, n_engines: int, pressure: str = "high",
+            workload: str = "private", prefix_cache: bool = False,
             duration: float = 0.5, blocks_per_req: int = 4,
             window: int = 3, seed: int = 0) -> dict:
-    """One grid cell: n_engines real threads churning requests."""
+    """One grid cell: n_engines real reader threads + 1 reclaimer thread."""
     num_blocks = PRESSURE[pressure] * n_engines
-    pool = BlockPool(num_blocks, n_engines=n_engines,
+    pool = BlockPool(num_blocks, n_engines=n_engines + 1,
                      reclaim_threshold=max(4, num_blocks // 8),
                      pressure_factor=2, policy=make_policy(scheme))
+    reclaimer = Reclaimer(pool, engine_id=n_engines, interval_s=0.001)
     stop = threading.Event()
     steps = [0] * n_engines
+    requests = [0] * n_engines
     uaf = [0]
     errors = []
 
     def engine(eid: int):
-        live = []          # sliding window of in-flight "requests"
+        rng = random.Random(seed * 1000 + eid)
+        live = []          # sliding window: (shared_blocks, private_blocks)
         try:
             while not stop.is_set():
                 pool.start_step(eid)
+                shared, extra = [], []   # prefix part: shared or private
+                n_private = blocks_per_req
+                if workload == "shared-prefix":
+                    n_private = PRIVATE_BLOCKS
+                    key = ("px", rng.randrange(N_PREFIXES))
+                    hit = (pool.acquire_prefix(eid, key)
+                           if prefix_cache else None)
+                    if hit is not None:
+                        shared = hit[0]
+                    else:
+                        try:
+                            pfx = pool.allocate(eid, PREFIX_BLOCKS)
+                        except OutOfBlocks:
+                            if prefix_cache:
+                                pool.evict_prefixes(eid, 4)
+                            pool.reclaim(eid)
+                            pool.end_step(eid)
+                            continue
+                        if prefix_cache and pool.share_prefix(eid, key, pfx):
+                            shared = pfx
+                        else:
+                            extra = pfx   # cache off / lost race: private
                 try:
-                    blocks = pool.allocate(eid, blocks_per_req)
-                    live.append(blocks)
+                    priv = pool.allocate(eid, n_private)
                 except OutOfBlocks:
+                    if shared:
+                        pool.release_shared(eid, shared)
+                        pool.rollback_prefix_hit(len(shared))
+                    if extra:
+                        pool.retire(eid, extra)
+                    if prefix_cache:
+                        pool.evict_prefixes(eid, 4)
                     pool.reclaim(eid)
                     pool.end_step(eid)
                     continue
-                # batched reader session over the whole working set, then
-                # touch every block (a decode step reading its KV pages)
-                session = [b for req in live for b in req]
-                pool.reserve(eid, session)
-                pool.touch(eid, session)
-                if len(live) > window:
-                    pool.retire(eid, live.pop(0))
+                live.append((shared, extra + priv))
+                requests[eid] += 1
+                _touch_and_roll(eid, live)
                 pool.end_step(eid)
                 steps[eid] += 1
         except UseAfterFree as e:
@@ -77,72 +124,142 @@ def run_one(scheme: str, n_engines: int, pressure: str = "high",
             errors.append(str(e))
         except Exception as e:  # noqa: BLE001
             errors.append(f"{type(e).__name__}: {e}")
+        finally:
+            for sh, pv in live:
+                try:
+                    pool.retire(eid, pv)
+                    if sh:
+                        pool.release_shared(eid, sh)
+                except Exception:  # noqa: BLE001 -- teardown best effort
+                    pass
+
+    def _touch_and_roll(eid: int, live: list) -> None:
+        # batched reader session over the whole working set, then touch
+        # every block (a decode step reading its KV pages)
+        session = [b for sh, pv in live for b in sh + pv]
+        pool.reserve(eid, session)
+        pool.touch(eid, session)
+        if len(live) > window:
+            sh, pv = live.pop(0)
+            pool.retire(eid, pv)
+            if sh:
+                pool.release_shared(eid, sh)
 
     threads = [threading.Thread(target=engine, args=(i,))
                for i in range(n_engines)]
     t0 = time.perf_counter()
+    reclaimer.start()
     for t in threads:
         t.start()
     time.sleep(duration)
     stop.set()
     for t in threads:
         t.join(timeout=30)
+    reclaimer.stop()
     elapsed = time.perf_counter() - t0
     total = sum(steps)
+    pool.evict_prefixes(0)
     pool.policy.flush()
     s = pool.stats
+    per_engine = [n / elapsed for n in steps]
+    n_reqs = sum(requests)
     return {
-        "scheme": scheme, "threads": n_engines, "pressure": pressure,
-        "steps": total,
+        "scheme": scheme, "engines": n_engines, "pressure": pressure,
+        "workload": workload, "prefix_cache": prefix_cache,
+        "steps": total, "requests": n_reqs,
         "us_per_step": 1e6 * elapsed / max(total, 1),
+        "steps_per_s_per_engine": per_engine,
+        "steps_per_s_min": min(per_engine) if per_engine else 0.0,
+        "steps_per_s_mean": (sum(per_engine) / len(per_engine)
+                             if per_engine else 0.0),
         "peak_unreclaimed": s.retired_peak,
         "freed": s.freed, "allocated": s.allocated,
+        "alloc_per_req": s.allocated / max(n_reqs, 1),
+        "blocks_saved": s.blocks_saved,
+        "prefix_hits": s.prefix_hits, "prefix_evictions": s.prefix_evictions,
         "pings": s.pings, "publishes": s.publishes,
+        "reclaimer_passes": reclaimer.passes,
         "uaf": uaf[0], "errors": errors[:3],
     }
 
 
-def run_grid(schemes=DEFAULT_SCHEMES, threads=(1, 2, 4),
-             pressures=("low", "high"), duration: float = 0.5) -> list:
+def run_grid(schemes=DEFAULT_SCHEMES, engines=(1, 2, 4),
+             pressures=("low", "high"), duration: float = 0.5,
+             shared: bool = True) -> list:
+    """scheme x engines x pressure on the private workload, plus (when
+    ``shared``) a cache-on/cache-off shared-prefix pair per scheme -- the
+    allocation-reduction comparison from the acceptance criteria."""
     rows = []
     for scheme in schemes:
-        for n in threads:
+        for n in engines:
             for p in pressures:
                 r = run_one(scheme, n, p, duration=duration)
                 rows.append(r)
-                print(f"# {scheme:14s} t={n} {p:4s} "
+                print(f"# {scheme:14s} e={n} {p:4s} "
                       f"{r['us_per_step']:9.1f} us/step "
+                      f"per-engine min/mean {r['steps_per_s_min']:7.0f}/"
+                      f"{r['steps_per_s_mean']:7.0f} steps/s "
                       f"peak_unreclaimed={r['peak_unreclaimed']:4d} "
                       f"freed={r['freed']:6d} pings={r['pings']:5d} "
                       f"uaf={r['uaf']}")
-                assert r["uaf"] == 0, f"use-after-free under {scheme}: {r['errors']}"
+                assert r["uaf"] == 0, \
+                    f"use-after-free under {scheme}: {r['errors']}"
+        if shared:
+            # the allocation-reduction comparison runs at LOW pressure so
+            # the hot prefix set can stay resident; the private grid above
+            # already covers high-pressure robustness
+            n = max(engines) if 2 not in engines else 2
+            base = run_one(scheme, n, "low", workload="shared-prefix",
+                           prefix_cache=False, duration=duration)
+            cached = run_one(scheme, n, "low", workload="shared-prefix",
+                             prefix_cache=True, duration=duration)
+            rows += [base, cached]
+            print(f"# {scheme:14s} e={n} shared-prefix alloc/req "
+                  f"{base['alloc_per_req']:.2f} -> {cached['alloc_per_req']:.2f} "
+                  f"(hits={cached['prefix_hits']}, "
+                  f"saved={cached['blocks_saved']} blocks) "
+                  f"uaf={base['uaf']}+{cached['uaf']}")
+            assert base["uaf"] == 0 and cached["uaf"] == 0, \
+                f"use-after-free under {scheme} (shared): " \
+                f"{base['errors']} {cached['errors']}"
+            assert cached["alloc_per_req"] < base["alloc_per_req"], \
+                f"prefix cache did not reduce allocations under {scheme}: " \
+                f"{cached['alloc_per_req']:.2f} vs {base['alloc_per_req']:.2f}"
     return rows
 
 
 def to_csv(rows) -> list:
     out = []
     for r in rows:
+        tag = f"serve_reclaim:{r['scheme']}:e{r['engines']}:{r['pressure']}"
+        if r["workload"] == "shared-prefix":
+            tag += ":shared" + ("+cache" if r["prefix_cache"] else "")
         out.append(
-            f"serve_reclaim:{r['scheme']}:t{r['threads']}:{r['pressure']},"
-            f"{r['us_per_step']:.2f},"
+            f"{tag},{r['us_per_step']:.2f},"
             f"peak_unreclaimed={r['peak_unreclaimed']};freed={r['freed']};"
-            f"pings={r['pings']};publishes={r['publishes']};uaf={r['uaf']}")
+            f"pings={r['pings']};publishes={r['publishes']};"
+            f"per_engine_min={r['steps_per_s_min']:.0f};"
+            f"alloc_per_req={r['alloc_per_req']:.2f};uaf={r['uaf']}")
     return out
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="small grid for CI smoke (3 schemes x 2 threads)")
+                    help="small grid for CI smoke (3 schemes, high pressure)")
+    ap.add_argument("--engines", type=int, default=None, metavar="N",
+                    help="restrict the engines axis to a single value")
     ap.add_argument("--duration", type=float, default=None)
     ap.add_argument("--out", default="results/serve_reclaim.json")
     args = ap.parse_args()
+    engines = (args.engines,) if args.engines else None
     if args.quick:
-        rows = run_grid(schemes=QUICK_SCHEMES, threads=(1, 2),
+        rows = run_grid(schemes=QUICK_SCHEMES, engines=engines or (1, 2),
                         pressures=("high",),
                         duration=args.duration or 0.2)
     else:
-        rows = run_grid(duration=args.duration or 0.5)
+        rows = run_grid(engines=engines or (1, 2, 4),
+                        duration=args.duration or 0.5)
     Path(args.out).parent.mkdir(parents=True, exist_ok=True)
     Path(args.out).write_text(json.dumps(rows, indent=1))
     print("name,us_per_call,derived")

@@ -1,8 +1,11 @@
-"""Serving example: batched requests through the continuous-batching engine
-whose KV blocks are reclaimed by a pluggable SMR policy (the paper's
-techniques as the framework feature).
+"""Serving example: batched requests through the sharded continuous-batching
+runtime (scheduler -> N engine workers -> reclaimer) whose KV blocks are
+reclaimed by a pluggable SMR policy (the paper's techniques as the framework
+feature).
 
     PYTHONPATH=src python examples/serve_paged.py                      # EpochPOP pool
+    PYTHONPATH=src python examples/serve_paged.py --engines 2          # sharded runtime
+    PYTHONPATH=src python examples/serve_paged.py --engines 2 --prefix-cache
     PYTHONPATH=src python examples/serve_paged.py --smr HazardPtrPOP   # any registry scheme
     PYTHONPATH=src python examples/serve_paged.py --smr EBR
 """
@@ -25,6 +28,12 @@ def main():
                     help="SMR scheme guarding the block pool: "
                          "'EpochPOP-pool' (native, default) or any of "
                          + ", ".join(supported_schemes()))
+    ap.add_argument("--engines", type=int, default=1,
+                    help="number of engine worker threads (each its own "
+                         "SMR reader; +1 pool slot for the reclaimer)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share page-aligned prompt prefixes across "
+                         "requests/engines (blocks retire through SMR)")
     ap.add_argument("--requests", type=int, default=10)
     args = ap.parse_args()
 
@@ -32,26 +41,35 @@ def main():
                      d_ff=128, vocab=128, groups=dense_stack(2), remat="none",
                      dtype="float32")
     params = init_params(cfg, jax.random.PRNGKey(0))
-    pool = BlockPool(128, n_engines=1, reclaim_threshold=8, pressure_factor=2,
-                     policy=make_policy(args.smr))
+    pool = BlockPool(128, n_engines=args.engines + 1, reclaim_threshold=8,
+                     pressure_factor=2, policy=make_policy(args.smr))
     eng = ServeEngine(cfg, params, max_batch=4, page_size=8, max_seq=64,
-                      pool=pool)
+                      pool=pool, n_engines=args.engines,
+                      prefix_cache=args.prefix_cache)
     eng.start()
     t0 = time.time()
-    reqs = [eng.submit([1 + i % 16, 9, 42], max_new=8)
+    # a hot shared prefix (page-aligned when --prefix-cache) + a unique tail
+    prefix = [1, 9, 42, 7, 3, 5, 2, 8]
+    reqs = [eng.submit(prefix + [1 + i % 16], max_new=8)
             for i in range(args.requests)]
     for i, r in enumerate(reqs):
         r.done.wait(timeout=300)
         print(f"req {i}: prompt={r.prompt} -> {r.out}")
     eng.stop()
+    pool.evict_prefixes(0)
     pool.policy.flush()
     s = pool.stats
     print(f"\n{len(reqs)} requests in {time.time()-t0:.1f}s | "
-          f"policy={pool.policy.name} | pool: "
+          f"engines={args.engines} policy={pool.policy.name} | pool: "
           f"allocated={s.allocated} freed={s.freed} "
           f"retired_peak={s.retired_peak} "
           f"epoch_reclaims={s.epoch_reclaims} pings={s.pings} "
           f"pop_reclaims={s.pop_reclaims} touches={s.touches}")
+    if args.prefix_cache:
+        print(f"prefix cache: hits={s.prefix_hits} misses={s.prefix_misses} "
+              f"blocks_saved={s.blocks_saved} evictions={s.prefix_evictions} "
+              f"prefill_tokens_skipped="
+              f"{sum(w.prefill_tokens_skipped for w in eng.workers)}")
     if eng.error is not None:
         raise SystemExit(f"ENGINE FAILED: {type(eng.error).__name__}: {eng.error}")
     print("use-after-free: none (hard error if one had occurred)")

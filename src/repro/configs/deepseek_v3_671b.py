@@ -3,7 +3,6 @@
 1 shared top-8 with per-expert d_ff=2048 (first 3 layers dense d_ff=18432),
 vocab=129280, MTP head."""
 
-import dataclasses
 
 from repro.configs.base import (ArchConfig, Group, LayerSpec, MLAConfig,
                                 MoEConfig)

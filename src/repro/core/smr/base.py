@@ -15,9 +15,9 @@ under all ten schemes -- the paper's "drop-in replacement" property.
 
 from __future__ import annotations
 
-from typing import Dict, Generator, List, Optional
+from typing import Dict, Generator, List
 
-from repro.core.sim.engine import NULL, Engine, ThreadCtx
+from repro.core.sim.engine import Engine, ThreadCtx
 
 MAX_ERA = 1 << 60
 

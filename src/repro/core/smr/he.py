@@ -5,7 +5,7 @@ from __future__ import annotations
 
 from typing import Generator, List
 
-from repro.core.sim.engine import NULL, Engine, ThreadCtx
+from repro.core.sim.engine import Engine, ThreadCtx
 from repro.core.smr.base import MAX_ERA, SMRScheme
 
 NONE_ERA = 0

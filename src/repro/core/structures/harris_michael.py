@@ -9,7 +9,7 @@ node addresses.
 
 from __future__ import annotations
 
-from typing import Generator, Tuple
+from typing import Generator
 
 from repro.core.sim.engine import NULL, Engine, ThreadCtx
 from repro.core.smr.base import SMRScheme

@@ -15,8 +15,6 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 

@@ -14,7 +14,6 @@ attention used by the model code itself at long sequence length.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional, Tuple
 
 import jax

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from repro.configs.registry import ARCHS, get_config, get_smoke_config
 from repro.data.pipeline import DataConfig

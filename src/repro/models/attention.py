@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.kernels import ops as kops
-from repro.models.layers import Spec, apply_rope, rms_norm, softcap
+from repro.models.layers import Spec, apply_rope, rms_norm
 from repro.parallel import sharding as shlib
 
 

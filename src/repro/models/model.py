@@ -13,13 +13,12 @@ Modes:
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, Group, LayerSpec
+from repro.configs.base import ArchConfig, LayerSpec
 from repro.models import layers as L
 from repro.models.attention import apply_attn, attn_specs
 from repro.models.moe import apply_moe, moe_specs

@@ -12,7 +12,7 @@ which would be ~40 TB for deepseek-v3 at train_4k.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

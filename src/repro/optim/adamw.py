@@ -3,7 +3,7 @@ decoupled weight decay, global-norm clipping, schedule as a step function."""
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

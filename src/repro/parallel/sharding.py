@@ -11,7 +11,6 @@ rule order: batch=1 fails divisibility, so ``kv_seq`` claims ``data``.
 
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax

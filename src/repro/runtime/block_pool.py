@@ -21,13 +21,24 @@ Host adaptation (DESIGN.md §8): CPython cannot deliver POSIX signals to a
 chosen thread, so the ping is a flag checked at engine safe points (step
 boundaries); delivery is bounded because steps are bounded.  The faithful
 async-signal semantics are exercised in core/sim.
+
+Prefix-shared blocks: the pool additionally owns a content-keyed *prefix
+cache* mapping a prompt-prefix key to the blocks (plus an opaque payload,
+e.g. a prefilled KV snapshot) that hold it.  Shared blocks carry refcounts
+-- one reference per cache entry holding them plus one per engine request
+using them -- and when the last reference drops they are **retired, not
+freed**: SMR, not refcounting, decides when recycling is safe, so a reader
+session that still spans a just-released prefix block keeps it alive until
+the session closes (the robustness-under-reader-stall scenario epoch
+schemes handle poorly and the paper's POP fallback is built for).
 """
 
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Set
+from typing import (Any, Callable, Dict, Hashable, List, Optional, Sequence,
+                    Set, Tuple)
 
 from repro.core.sim.engine import UseAfterFree
 from repro.runtime.reclaim import EpochPOPPolicy, ReclaimPolicy
@@ -49,6 +60,13 @@ class PoolStats:
     retired_peak: int = 0
     touches: int = 0
     reserves: int = 0
+    # prefix-sharing counters
+    prefix_hits: int = 0
+    prefix_misses: int = 0
+    prefix_inserts: int = 0
+    prefix_evictions: int = 0
+    blocks_saved: int = 0          # allocations avoided via prefix reuse
+    shared_peak: int = 0           # peak # of distinct shared blocks
 
 
 class BlockPool:
@@ -86,6 +104,16 @@ class BlockPool:
         self._live_local: List[Set[int]] = [set() for _ in range(n_engines)]
         # reader sessions: block -> generation observed at reserve time
         self._session: List[Dict[int, int]] = [dict() for _ in range(n_engines)]
+
+        # prefix cache: key -> (blocks, payload); LRU = dict insertion order.
+        # _shared_ref counts every holder of a shared block (one per cache
+        # entry containing it + one per engine request using it);
+        # _engine_shared[e] tracks per-engine request refs so _live_local
+        # membership survives two requests on the same engine sharing a block.
+        self._prefix_cache: Dict[Hashable, Tuple[List[int], Any]] = {}
+        self._shared_ref: Dict[int, int] = {}
+        self._engine_shared: List[Dict[int, int]] = [dict()
+                                                     for _ in range(n_engines)]
 
         self.stats = PoolStats()
         self.policy = policy or EpochPOPPolicy()
@@ -169,6 +197,146 @@ class BlockPool:
         self.policy.on_clear_session(engine)
 
     # ------------------------------------------------------------------
+    # prefix sharing (content-keyed shared blocks; SMR decides recycling)
+    # ------------------------------------------------------------------
+
+    def share_prefix(self, engine: int, key: Hashable,
+                     blocks: Sequence[int], payload: Any = None) -> bool:
+        """Publish ``blocks`` (engine-owned, or already shared) as the cached
+        image of prompt-prefix ``key``.  The cache takes one reference per
+        block; blocks that were engine-private additionally gain the caller's
+        request reference (they stay in the engine's live set until
+        :meth:`release_shared`).  Returns False if ``key`` is already cached
+        (a concurrent insert won the race; the caller keeps its blocks
+        private and retires them normally)."""
+        with self._lock:
+            if key in self._prefix_cache:
+                return False
+            self._prefix_cache[key] = (list(blocks), payload)
+            er = self._engine_shared[engine]
+            for b in blocks:
+                if b not in self._shared_ref:
+                    # private -> shared: the caller's request reference plus
+                    # the cache entry's own reference
+                    er[b] = er.get(b, 0) + 1
+                    self._shared_ref[b] = 2
+                else:
+                    # already shared (a reused shorter prefix): the caller
+                    # holds its request ref from acquire; add the cache's
+                    self._shared_ref[b] += 1
+            self.stats.prefix_inserts += 1
+            self.stats.shared_peak = max(self.stats.shared_peak,
+                                         len(self._shared_ref))
+        return True
+
+    def acquire_prefix(self, engine: int, key: Hashable, *,
+                       count_miss: bool = True):
+        """Cache lookup: on a hit, take one request reference per block for
+        ``engine`` (blocks join its live set, so the policy protects them
+        like any owned block) and return ``(blocks, payload)``; on a miss
+        return None.  Callers probing several candidate keys for one
+        logical lookup pass ``count_miss=False`` and call
+        :meth:`count_prefix_miss` once themselves, so hit-rate stats stay
+        per-lookup, not per-probe."""
+        with self._lock:
+            entry = self._prefix_cache.get(key)
+            if entry is None:
+                if count_miss:
+                    self.stats.prefix_misses += 1
+                return None
+            blocks, payload = entry
+            del self._prefix_cache[key]             # LRU: move to MRU end
+            self._prefix_cache[key] = entry
+            er = self._engine_shared[engine]
+            for b in blocks:
+                self._shared_ref[b] += 1
+                er[b] = er.get(b, 0) + 1
+            self._live_local[engine].update(blocks)
+            self.stats.prefix_hits += 1
+            self.stats.blocks_saved += len(blocks)
+        return list(blocks), payload
+
+    def release_shared(self, engine: int, blocks: Sequence[int]) -> int:
+        """Drop ``engine``'s request references on shared ``blocks``.  A
+        block whose LAST reference (cache entries included) drops here is
+        retired -- never freed directly: the attached SMR policy decides
+        when it is safe to recycle, which keeps it alive for any reader
+        session still spanning it.  Returns the number retired."""
+        dead: List[int] = []
+        with self._lock:
+            er = self._engine_shared[engine]
+            for b in blocks:
+                if b not in self._shared_ref:
+                    # not (or no longer) shared: a double release must not
+                    # push the refcount negative and spuriously re-retire a
+                    # block that may already be free or reallocated
+                    continue
+                n = er.get(b, 0)
+                if n <= 1:
+                    er.pop(b, None)
+                    self._live_local[engine].discard(b)
+                else:
+                    er[b] = n - 1
+                r = self._shared_ref[b] - 1
+                if r <= 0:
+                    del self._shared_ref[b]
+                    dead.append(b)
+                else:
+                    self._shared_ref[b] = r
+        if dead:
+            self.retire(engine, dead)
+        return len(dead)
+
+    def evict_prefixes(self, engine: int,
+                       max_entries: Optional[int] = None) -> int:
+        """Drop up to ``max_entries`` LRU cache entries (all when None).
+        Blocks whose last reference was the evicted entry go to the retired
+        list -- recycled only once the SMR policy proves no reader session
+        or live set still spans them.  Returns the number of entries
+        evicted."""
+        dead: List[int] = []
+        with self._lock:
+            keys = list(self._prefix_cache)
+            if max_entries is not None:
+                keys = keys[:max_entries]
+            for key in keys:
+                blocks, _ = self._prefix_cache.pop(key)
+                for b in blocks:
+                    r = self._shared_ref.get(b, 0) - 1
+                    if r <= 0:
+                        self._shared_ref.pop(b, None)
+                        dead.append(b)
+                    else:
+                        self._shared_ref[b] = r
+            self.stats.prefix_evictions += len(keys)
+            evicted = len(keys)
+        if dead:
+            self.retire(engine, dead)
+        return evicted
+
+    def count_prefix_miss(self) -> None:
+        with self._lock:
+            self.stats.prefix_misses += 1
+
+    def rollback_prefix_hit(self, n_blocks: int) -> None:
+        """Un-count one hit whose admission was rolled back (the caller
+        released the acquired blocks without using them), so hit/saved
+        stats reflect admissions that actually went through."""
+        with self._lock:
+            self.stats.prefix_hits -= 1
+            self.stats.blocks_saved -= n_blocks
+
+    @property
+    def prefix_entries(self) -> int:
+        with self._lock:
+            return len(self._prefix_cache)
+
+    @property
+    def shared_blocks(self) -> int:
+        with self._lock:
+            return len(self._shared_ref)
+
+    # ------------------------------------------------------------------
     # reclaimer API
     # ------------------------------------------------------------------
 
@@ -217,12 +385,15 @@ class BlockPool:
             return len(self._retired)
 
     def check_no_leaks(self) -> bool:
-        """All blocks accounted for: free + retired + live."""
+        """All blocks accounted for: free + retired + held, where held =
+        engine live sets ∪ shared blocks (a cached prefix block with zero
+        active requests is held by the cache, not leaked)."""
         live = set()
         for s in self._live_local:
             live |= s
         with self._lock:
-            total = len(self._free) + len(self._retired) + len(live)
-            dup = (set(self._free) & live) | (
+            held = live | set(self._shared_ref)
+            total = len(self._free) + len(self._retired) + len(held)
+            dup = (set(self._free) & held) | (
                 {b for b, _ in self._retired} & set(self._free))
         return total == self.num_blocks and not dup

@@ -180,9 +180,20 @@ class EpochPOPPolicy(ReclaimPolicy):
 
     def _reclaim_pop(self, engine: Optional[int] = None) -> int:
         """Ping all OTHER engines, wait for publishes, free the complement;
-        the caller's own live set is read directly (paper Alg. 2 line 37)."""
+        the caller's own live set is read directly (paper Alg. 2 line 37).
+
+        Only blocks retired BEFORE this pass (epoch < cut) are eligible --
+        the paper's reclaimer scans its retire-buffer snapshot, not retires
+        that race with the pass.  A reader that published after our ping may
+        legitimately reserve a block that is still cached/reachable at that
+        point; such a block's retire necessarily lands at an epoch >= cut,
+        so excluding it closes the publish-then-reserve window (reachable
+        since prefix-shared blocks can be reserved without an ownership
+        reference)."""
         pool = self.pool
         pool.stats.pings += 1
+        with pool._lock:
+            cut = pool._epoch
         snap = list(self._publish_counter)
         others = [i for i in range(pool.n_engines) if i != engine]
         for i in others:
@@ -190,6 +201,11 @@ class EpochPOPPolicy(ReclaimPolicy):
         deadline = time.monotonic() + self._ping_timeout_s
         pending = set(others)
         while pending and time.monotonic() < deadline:
+            if engine is not None:
+                # service our own ping while waiting: two concurrent POP
+                # passes would otherwise deadlock on each other's publish
+                # counters until timeout (signals interrupt anything)
+                self.safepoint(engine)
             pending = {i for i in pending
                        if self._publish_counter[i] <= snap[i]}
             if pending:
@@ -204,7 +220,8 @@ class EpochPOPPolicy(ReclaimPolicy):
         if engine is not None:
             reserved |= set(pool._live_local[engine])
             reserved |= set(pool._session[engine])
-        freed = pool._return_blocks_if(lambda b, e: b not in reserved)
+        freed = pool._return_blocks_if(
+            lambda b, e: e < cut and b not in reserved)
         if freed:
             pool.stats.pop_reclaims += 1
         return freed
@@ -332,10 +349,13 @@ class SimulatedSMRPolicy(ReclaimPolicy):
     # -- reclamation --
 
     def reclaim(self, engine: Optional[int] = None) -> int:
+        """Drain every sim thread's retired list regardless of caller.
+        Retired nodes live with the thread that retired them, so a dedicated
+        reclaimer thread (which retires nothing itself) must flush its peers;
+        the policy-wide lock makes cross-thread drives safe."""
         with self._mtx:
             before = self.pool.stats.freed
-            tids = range(self.pool.n_engines) if engine is None else [engine]
-            for tid in tids:
+            for tid in range(self.pool.n_engines):
                 t = self.sim.threads[tid]
                 self.sim.drive(tid, self.smr.flush(t))
             self._collect_freed()

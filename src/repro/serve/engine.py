@@ -1,43 +1,40 @@
-"""Serving engine: continuous batching over a paged KV cache whose blocks
-are reclaimed through the pluggable SMR layer (runtime/block_pool.py +
-runtime/reclaim.py).
+"""ServeEngine facade over the sharded serving runtime.
 
-Small-model CPU path used by examples/ and tests; the same block-table
-layout feeds the Pallas paged_attention kernel on TPU.  The engine thread is
-an SMR *reader*: each decode step opens a reader session over the blocks of
-every in-flight request (one batched reserve, not one fence per block) and
-touches them as it decodes; the attached ReclaimPolicy guarantees none is
-freed or recycled underneath.  With the default EpochPOP policy the engine
-holds block references privately and only publishes them when the reclaimer
-pings; with ``smr=<scheme>`` any registry scheme guards the same hot path.
+The monolithic single-reader engine is split into three layers (this PR's
+topology; see docs/ARCHITECTURE.md):
+
+* :class:`~repro.serve.scheduler.Scheduler` -- admission, thread-safe
+  request ids, request->engine placement (least-loaded, round-robin ties);
+* N :class:`~repro.serve.worker.EngineWorker` threads -- each an
+  independent SMR reader with its own engine id and reader session over ONE
+  shared :class:`~repro.runtime.block_pool.BlockPool`;
+* a :class:`~repro.serve.worker.Reclaimer` thread -- retires/frees through
+  the pluggable ReclaimPolicy, so publish-on-ping passes fan out to all N
+  readers concurrently (the paper's multi-reader scaling scenario).
+
+``ServeEngine`` keeps the original one-object API (construct, start,
+submit, stop, ``.error``, ``.pool``) so existing callers and tests are
+unchanged; ``n_engines``/``prefix_cache`` opt into the sharded runtime and
+content-keyed KV prefix sharing.  When a caller supplies a pool without a
+spare engine slot, the runtime degrades gracefully to worker-driven
+reclamation (no dedicated reclaimer thread), which is the pre-split
+behavior.
 """
 
 from __future__ import annotations
 
-import queue
-import threading
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.kernels import ops as kops
-from repro.models.model import apply_model, init_cache
-from repro.runtime.block_pool import BlockPool, OutOfBlocks
+from repro.models.model import apply_model
+from repro.runtime.block_pool import BlockPool
+from repro.serve.scheduler import Scheduler
+from repro.serve.worker import EngineWorker, Reclaimer, Request
 
-
-@dataclass
-class Request:
-    rid: int
-    prompt: List[int]
-    max_new: int = 16
-    out: List[int] = field(default_factory=list)
-    blocks: List[int] = field(default_factory=list)
-    done: threading.Event = field(default_factory=threading.Event)
+__all__ = ["PagedKVCache", "Request", "ServeEngine"]
 
 
 class PagedKVCache:
@@ -61,134 +58,58 @@ class PagedKVCache:
 
 
 class ServeEngine:
-    """Single-engine continuous batching loop (engine id 0 of the pool).
-
-    A separate *reclaimer thread* (engine id 1 slot reserved for tests)
-    exercises concurrent reclamation against this reader.
-    """
+    """Facade: Scheduler + N EngineWorkers + Reclaimer over one BlockPool."""
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
                  page_size: int = 16, num_pages: int = 256,
                  max_seq: int = 256, pool: Optional[BlockPool] = None,
-                 smr: Optional[str] = None):
+                 smr: Optional[str] = None, n_engines: int = 1,
+                 prefix_cache: bool = False,
+                 reclaim_interval_s: float = 0.002):
         self.cfg = cfg
         self.params = params
-        self.max_batch = max_batch
-        self.page = page_size
-        self.max_seq = max_seq
         if pool is None:
             from repro.runtime.reclaim import make_policy
-            pool = BlockPool(num_pages, n_engines=1, reclaim_threshold=16,
-                             policy=make_policy(smr))
+            # one engine slot per worker + one for the dedicated reclaimer
+            pool = BlockPool(num_pages, n_engines=n_engines + 1,
+                             reclaim_threshold=16, policy=make_policy(smr))
+        if pool.n_engines < n_engines:
+            raise ValueError(
+                f"pool has {pool.n_engines} engine slots, need {n_engines}")
         self.pool = pool
-        self.engine_id = 0
-        self.queue: "queue.Queue[Request]" = queue.Queue()
-        self.running: Dict[int, Request] = {}
-        self._caches: Dict[int, dict] = {}
-        self._stop = threading.Event()
-        self._rid = 0
-        self.steps = 0
-        self.error: Optional[BaseException] = None
+        self.n_engines = n_engines
+        # one jitted decode shared by every worker (JAX execution is
+        # thread-safe; the compile cache is shared)
         self._decode = jax.jit(
             lambda p, c, t: apply_model(p, t, cfg=cfg, mode="decode", cache=c))
-        self._thread: Optional[threading.Thread] = None
+        self.workers: List[EngineWorker] = [
+            EngineWorker(i, cfg, params, pool, self._decode,
+                         max_batch=max_batch, page_size=page_size,
+                         max_seq=max_seq, prefix_cache=prefix_cache)
+            for i in range(n_engines)]
+        # dedicated reclaimer only if the pool has a spare engine slot;
+        # otherwise workers reclaim on pressure (pre-split behavior)
+        self.reclaimer: Optional[Reclaimer] = None
+        if pool.n_engines > n_engines:
+            self.reclaimer = Reclaimer(pool, engine_id=n_engines,
+                                       interval_s=reclaim_interval_s)
+        self.scheduler = Scheduler(self.workers, self.reclaimer)
 
-    # -- client API --
+    # -- client API (unchanged from the monolithic engine) --
 
-    def submit(self, prompt: List[int], max_new: int = 16) -> Request:
-        self._rid += 1
-        r = Request(self._rid, prompt, max_new)
-        self.queue.put(r)
-        if self.error is not None:
-            # engine already failed: it will never drain the queue again
-            self._drain_queue()
-        return r
+    def submit(self, prompt: Sequence[int], max_new: int = 16) -> Request:
+        return self.scheduler.submit(prompt, max_new)
 
-    def _drain_queue(self):
-        while True:
-            try:
-                self.queue.get_nowait().done.set()
-            except queue.Empty:
-                return
+    def start(self) -> None:
+        self.scheduler.start()
 
-    def start(self):
-        self._thread = threading.Thread(target=self._loop, daemon=True)
-        self._thread.start()
+    def stop(self) -> None:
+        self.scheduler.stop()
 
-    def stop(self):
-        self._stop.set()
-        if self._thread:
-            self._thread.join(timeout=30)
+    @property
+    def steps(self) -> int:
+        return self.scheduler.steps
 
-    # -- engine loop (POP reader) --
-
-    def _admit(self):
-        while len(self.running) < self.max_batch:
-            try:
-                r = self.queue.get_nowait()
-            except queue.Empty:
-                return
-            try:
-                n_blocks = (len(r.prompt) + r.max_new + self.page - 1) // self.page
-                r.blocks = self.pool.allocate(self.engine_id, n_blocks)
-            except OutOfBlocks:
-                self.pool.reclaim(self.engine_id)
-                try:
-                    r.blocks = self.pool.allocate(self.engine_id, n_blocks)
-                except OutOfBlocks:
-                    self.queue.put(r)   # retry later
-                    return
-            # per-request dense cache at host scale (the paged Pallas kernel
-            # takes over on device; block accounting is identical)
-            cache = init_cache(self.cfg, 1, self.max_seq, self.cfg.dtype)
-            self._caches[r.rid] = cache
-            # prefill token-by-token (tiny models; examples keep prompts short)
-            toks = jnp.asarray([r.prompt], jnp.int32)
-            for t in range(len(r.prompt)):
-                _, cache, _ = self._decode(self.params, cache, toks[:, t: t + 1])
-            self._caches[r.rid] = cache
-            self.running[r.rid] = r
-
-    def _step(self):
-        if not self.running:
-            time.sleep(0.001)
-            return
-        # one batched reader session over the whole step's working set: the
-        # paper's traversal-retention argument at serving granularity (one
-        # publish on ping instead of a fence per block)
-        session = [b for r in self.running.values() for b in r.blocks]
-        self.pool.reserve(self.engine_id, session)
-        finished = []
-        for rid, r in list(self.running.items()):
-            self.pool.touch(self.engine_id, r.blocks)    # UAF tripwire
-            cache = self._caches[rid]
-            last = r.out[-1] if r.out else r.prompt[-1]
-            tok = jnp.asarray([[last]], jnp.int32)
-            logits, cache, _ = self._decode(self.params, cache, tok)
-            nxt = int(jnp.argmax(logits[0, -1]))
-            r.out.append(nxt)
-            self._caches[rid] = cache
-            if len(r.out) >= r.max_new:
-                finished.append(rid)
-        for rid in finished:
-            r = self.running.pop(rid)
-            del self._caches[rid]
-            self.pool.retire(self.engine_id, r.blocks)   # -> SMR reclamation
-            r.blocks = []
-            r.done.set()
-        self.steps += 1
-
-    def _loop(self):
-        try:
-            while not self._stop.is_set():
-                self.pool.start_step(self.engine_id)   # policy announce + safepoint
-                self._admit()
-                self._step()
-                self.pool.end_step(self.engine_id)     # closes the reader session
-        except BaseException as e:  # noqa: BLE001 -- UseAfterFree et al.
-            # fail FAST: record the error and release every waiter instead of
-            # dying silently and leaving clients to hit done.wait timeouts
-            self.error = e
-            for r in list(self.running.values()):
-                r.done.set()
-            self._drain_queue()
+    @property
+    def error(self) -> Optional[BaseException]:
+        return self.scheduler.error

@@ -1,0 +1,83 @@
+"""Scheduler: admission and request->engine placement for the sharded
+serving runtime.
+
+The scheduler is the single client-facing entry point.  It hands out
+request ids under a lock (clients submit from many threads), places each
+request on the least-loaded live worker (outstanding queue + in-flight
+batch), and owns the lifecycle of the worker fleet plus the dedicated
+reclaimer.  Continuous batching itself stays in the workers: each admits
+from its own queue up to ``max_batch`` at every step boundary, so admission
+never blocks a decode step on another engine's queue lock.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import List, Optional, Sequence
+
+from repro.serve.worker import EngineWorker, Reclaimer, Request
+
+
+class Scheduler:
+    """Admission + placement over N workers and one reclaimer."""
+
+    def __init__(self, workers: Sequence[EngineWorker],
+                 reclaimer: Optional[Reclaimer] = None):
+        self.workers: List[EngineWorker] = list(workers)
+        self.reclaimer = reclaimer
+        self._rid = 0
+        self._rid_lock = threading.Lock()
+        self._place = 0         # round-robin tiebreak cursor
+
+    # -- client API --
+
+    def submit(self, prompt: Sequence[int], max_new: int = 16) -> Request:
+        with self._rid_lock:
+            self._rid += 1
+            rid = self._rid
+            self._place += 1
+            tiebreak = self._place
+        r = Request(rid, list(prompt), max_new)
+        alive = [w for w in self.workers if w.error is None]
+        if not alive:
+            # whole fleet failed: release the waiter immediately
+            r.done.set()
+            return r
+        # least-loaded placement, round-robin among ties
+        n = len(self.workers)
+        w = min(alive, key=lambda w: (w.load, (w.engine_id + tiebreak) % n))
+        w.enqueue(r)
+        return r
+
+    # -- lifecycle --
+
+    def start(self) -> None:
+        for w in self.workers:
+            w.start()
+        if self.reclaimer is not None:
+            self.reclaimer.start()
+
+    def stop(self) -> None:
+        for w in self.workers:
+            w.stop()
+        if self.reclaimer is not None:
+            self.reclaimer.stop()
+
+    # -- aggregate views --
+
+    @property
+    def steps(self) -> int:
+        return sum(w.steps for w in self.workers)
+
+    @property
+    def steps_per_engine(self) -> List[int]:
+        return [w.steps for w in self.workers]
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        for w in self.workers:
+            if w.error is not None:
+                return w.error
+        if self.reclaimer is not None:
+            return self.reclaimer.error
+        return None

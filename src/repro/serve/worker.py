@@ -1,0 +1,308 @@
+"""Engine workers and the reclaimer: the thread-level actors of the sharded
+serving runtime.
+
+Each :class:`EngineWorker` is an independent SMR *reader* over the shared
+:class:`~repro.runtime.block_pool.BlockPool`: it owns one engine id, brackets
+every decode step with start_step/end_step, and opens one batched reader
+session per step over the KV blocks of all its in-flight requests.  With N
+workers plus the dedicated :class:`Reclaimer`, a publish-on-ping reclamation
+pass genuinely fans out to N concurrent readers -- the paper's signal-cost
+scaling scenario -- instead of the single hard-coded reader the monolithic
+engine had.
+
+Prefix sharing: when enabled, a worker admitting a request first asks the
+pool's content-keyed prefix cache for the longest page-aligned prompt prefix
+already prefilled by any worker.  A hit reuses the shared blocks (refcounted
+by the pool) AND the prefilled KV snapshot (immutable jax arrays, safe to
+share), so the worker skips both the allocation and the prefill compute for
+those tokens.  On finish, shared blocks are *released*, not retired; the
+pool retires them only when the last holder (cache entry included) lets go,
+and the SMR policy decides when recycling is actually safe.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.models.model import init_cache
+from repro.runtime.block_pool import BlockPool, OutOfBlocks
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    blocks: List[int] = field(default_factory=list)         # private
+    shared_blocks: List[int] = field(default_factory=list)  # prefix-shared
+    done: threading.Event = field(default_factory=threading.Event)
+
+    @property
+    def all_blocks(self) -> List[int]:
+        return self.shared_blocks + self.blocks
+
+
+class EngineWorker:
+    """One engine id of the pool: continuous-batching decode loop, SMR
+    reader sessions, optional prefix-cache admission."""
+
+    def __init__(self, engine_id: int, cfg, params, pool: BlockPool, decode,
+                 *, max_batch: int = 8, page_size: int = 16,
+                 max_seq: int = 256, prefix_cache: bool = False):
+        self.engine_id = engine_id
+        self.cfg = cfg
+        self.params = params
+        self.pool = pool
+        self.max_batch = max_batch
+        self.page = page_size
+        self.max_seq = max_seq
+        self.prefix_cache = prefix_cache
+        self._decode = decode
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.running: Dict[int, Request] = {}
+        self._caches: Dict[int, dict] = {}
+        self._stop = threading.Event()
+        self.steps = 0
+        self.prefill_tokens = 0
+        self.prefill_tokens_skipped = 0
+        self.error: Optional[BaseException] = None
+        self._thread: Optional[threading.Thread] = None
+
+    # -- scheduler-facing API --
+
+    @property
+    def load(self) -> int:
+        """Outstanding work (queued + in flight); placement key."""
+        return self.queue.qsize() + len(self.running)
+
+    def enqueue(self, r: Request) -> None:
+        self.queue.put(r)
+        if self.error is not None:
+            # worker already failed: it will never drain the queue again
+            self.drain_queue()
+
+    def drain_queue(self) -> None:
+        while True:
+            try:
+                self.queue.get_nowait().done.set()
+            except queue.Empty:
+                return
+
+    def start(self) -> None:
+        self._thread = threading.Thread(
+            target=self._loop, daemon=True, name=f"engine-{self.engine_id}")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=30)
+
+    # -- admission (prefix-cache aware) --
+
+    @staticmethod
+    def _prefix_key(tokens: List[int]):
+        return ("kv-prefix", tuple(tokens))
+
+    def _lookup_prefix(self, r: Request):
+        """Longest cached page-aligned prefix of r.prompt; returns
+        (shared_blocks, cache_snapshot, prefilled_len).  One logical lookup
+        = one hit or one miss in the stats, however many lengths it probes."""
+        n_full = len(r.prompt) // self.page
+        for k in range(n_full, 0, -1):
+            hit = self.pool.acquire_prefix(
+                self.engine_id, self._prefix_key(r.prompt[:k * self.page]),
+                count_miss=False)
+            if hit is not None:
+                blocks, (cache, plen) = hit
+                return blocks, cache, plen
+        if n_full:
+            self.pool.count_prefix_miss()
+        return [], None, 0
+
+    def _allocate(self, n_blocks: int) -> List[int]:
+        """Allocate with pressure fallbacks: reclaim, then (when the prefix
+        cache is on) evict LRU prefixes -- a small batch first, so hot
+        entries survive a transient spike; everything only as a last
+        resort -- and reclaim again."""
+        eid = self.engine_id
+        try:
+            return self.pool.allocate(eid, n_blocks)
+        except OutOfBlocks:
+            self.pool.reclaim(eid)
+        try:
+            return self.pool.allocate(eid, n_blocks)
+        except OutOfBlocks:
+            if not self.prefix_cache:
+                raise
+        for batch in (4, None):
+            self.pool.evict_prefixes(eid, batch)
+            self.pool.reclaim(eid)
+            try:
+                return self.pool.allocate(eid, n_blocks)
+            except OutOfBlocks:
+                if batch is None:
+                    raise
+        raise AssertionError("unreachable")
+
+    def _admit(self) -> None:
+        while len(self.running) < self.max_batch:
+            try:
+                r = self.queue.get_nowait()
+            except queue.Empty:
+                return
+            shared: List[int] = []
+            cache, plen = None, 0
+            if self.prefix_cache:
+                shared, cache, plen = self._lookup_prefix(r)
+            n_total = (len(r.prompt) + r.max_new + self.page - 1) // self.page
+            try:
+                r.blocks = self._allocate(n_total - len(shared))
+            except OutOfBlocks:
+                if shared:
+                    self.pool.release_shared(self.engine_id, shared)
+                    self.pool.rollback_prefix_hit(len(shared))
+                self.queue.put(r)   # retry later
+                return
+            r.shared_blocks = shared
+            if cache is None:
+                # per-request dense cache at host scale (the paged Pallas
+                # kernel takes over on device; block accounting is identical)
+                cache = init_cache(self.cfg, 1, self.max_seq, self.cfg.dtype)
+            self.prefill_tokens_skipped += plen
+            # prefill the uncached remainder token-by-token, snapshotting the
+            # cache at the last full-page boundary so the prefix is reusable
+            n_full = len(r.prompt) // self.page
+            boundary = n_full * self.page
+            snap = cache if plen == boundary else None
+            toks = jnp.asarray([r.prompt], jnp.int32)
+            for t in range(plen, len(r.prompt)):
+                # per-token safepoint: prefill length must not stretch the
+                # bounded ping-delivery window a whole prompt long
+                self.pool.safepoint(self.engine_id)
+                _, cache, _ = self._decode(self.params, cache, toks[:, t:t + 1])
+                self.prefill_tokens += 1
+                if t + 1 == boundary:
+                    snap = cache
+            self._caches[r.rid] = cache
+            self.running[r.rid] = r
+            if self.prefix_cache and n_full and plen < boundary:
+                self._insert_prefix(r, n_full, snap)
+
+    def _insert_prefix(self, r: Request, n_full: int, snap) -> None:
+        """Publish the full page-aligned prompt prefix: blocks 0..n_full-1
+        of the request (cached-shared first, then private) plus the KV
+        snapshot at the page boundary."""
+        k = len(r.shared_blocks)
+        converts = r.blocks[:n_full - k]
+        prefix_blocks = r.shared_blocks + converts
+        key = self._prefix_key(r.prompt[:n_full * self.page])
+        if self.pool.share_prefix(self.engine_id, key, prefix_blocks,
+                                  payload=(snap, n_full * self.page)):
+            # converted blocks are now shared: release (not retire) on finish
+            r.blocks = r.blocks[n_full - k:]
+            r.shared_blocks = prefix_blocks
+
+    # -- decode step (POP reader) --
+
+    def _step(self) -> None:
+        if not self.running:
+            time.sleep(0.001)
+            return
+        # one batched reader session over the whole step's working set: the
+        # paper's traversal-retention argument at serving granularity (one
+        # publish on ping instead of a fence per block)
+        session = [b for r in self.running.values() for b in r.all_blocks]
+        self.pool.reserve(self.engine_id, session)
+        finished = []
+        for rid, r in list(self.running.items()):
+            self.pool.touch(self.engine_id, r.all_blocks)   # UAF tripwire
+            cache = self._caches[rid]
+            last = r.out[-1] if r.out else r.prompt[-1]
+            tok = jnp.asarray([[last]], jnp.int32)
+            logits, cache, _ = self._decode(self.params, cache, tok)
+            nxt = int(jnp.argmax(logits[0, -1]))
+            r.out.append(nxt)
+            self._caches[rid] = cache
+            if len(r.out) >= r.max_new:
+                finished.append(rid)
+        for rid in finished:
+            r = self.running.pop(rid)
+            del self._caches[rid]
+            self.pool.retire(self.engine_id, r.blocks)      # -> SMR
+            if r.shared_blocks:
+                self.pool.release_shared(self.engine_id, r.shared_blocks)
+            r.blocks, r.shared_blocks = [], []
+            r.done.set()
+        self.steps += 1
+
+    def _loop(self) -> None:
+        try:
+            while not self._stop.is_set():
+                self.pool.start_step(self.engine_id)  # announce + safepoint
+                self._admit()
+                self._step()
+                self.pool.end_step(self.engine_id)    # closes the session
+        except BaseException as e:  # noqa: BLE001 -- UseAfterFree et al.
+            # fail FAST: record the error and release every waiter instead
+            # of dying silently and leaving clients to hit done.wait timeouts
+            self.error = e
+            for r in list(self.running.values()):
+                r.done.set()
+            self.drain_queue()
+
+
+class Reclaimer:
+    """First-class reclaimer thread: owns its own engine id in the pool
+    (announced quiescent, never a reader), periodically bumps the epoch and
+    runs the policy's reclamation pass -- under pressure the EpochPOP
+    fallback pings ALL worker engines concurrently, the fan-out the paper
+    measures.  When the free list runs low it also evicts LRU prefix-cache
+    entries, whose blocks then flow retire -> SMR -> free."""
+
+    def __init__(self, pool: BlockPool, engine_id: int, *,
+                 interval_s: float = 0.002,
+                 low_watermark: Optional[int] = None, evict_batch: int = 4):
+        self.pool = pool
+        self.engine_id = engine_id
+        self.interval_s = interval_s
+        self.low_watermark = (max(2, pool.num_blocks // 8)
+                              if low_watermark is None else low_watermark)
+        self.evict_batch = evict_batch
+        self.passes = 0
+        self.error: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> None:
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="reclaimer")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=30)
+
+    def _loop(self) -> None:
+        try:
+            while not self._stop.wait(self.interval_s):
+                # service pings aimed at OUR engine slot: a worker-initiated
+                # publish-on-ping pass pings every other slot, and this one
+                # holds no reservations -- publish the (empty) set promptly
+                # instead of stalling that worker until its ping timeout
+                self.pool.safepoint(self.engine_id)
+                if (self.pool.free_blocks <= self.low_watermark
+                        and self.pool.prefix_entries):
+                    self.pool.evict_prefixes(self.engine_id, self.evict_batch)
+                self.pool.reclaim(self.engine_id)
+                self.passes += 1
+        except BaseException as e:  # noqa: BLE001
+            self.error = e

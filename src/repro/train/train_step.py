@@ -4,7 +4,7 @@ lowers and the trainer executes."""
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

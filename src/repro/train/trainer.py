@@ -11,7 +11,7 @@ from __future__ import annotations
 import signal
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.models.model import init_params
-from repro.optim.adamw import AdamWState, adamw_init, cosine_schedule
+from repro.optim.adamw import adamw_init, cosine_schedule
 from repro.train.checkpoint import CheckpointManager
 from repro.train.train_step import make_train_step
 

@@ -5,7 +5,6 @@ no block is ever freed while an engine still holds it."""
 import threading
 import time
 
-import pytest
 
 from repro.runtime.block_pool import BlockPool, OutOfBlocks
 

@@ -4,10 +4,8 @@ production meshes in a subprocess that owns the 512-device XLA flag."""
 import json
 import subprocess
 import sys
-import textwrap
 from pathlib import Path
 
-import pytest
 
 ROOT = Path(__file__).resolve().parents[1]
 

@@ -1,7 +1,6 @@
 """Per-Pallas-kernel validation: interpret mode (kernel body executed on CPU)
 against the pure-jnp oracles in kernels/ref.py, sweeping shapes and dtypes."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -8,8 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs.registry import ARCHS, get_smoke_config
-from repro.models.model import (apply_model, cache_shapes, init_cache,
-                                init_params)
+from repro.models.model import apply_model, init_cache, init_params
 
 
 def _inputs(cfg, B=2, S=16, key=0):

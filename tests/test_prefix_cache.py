@@ -1,0 +1,173 @@
+"""Prefix-cache unit tests: content-keyed shared blocks with refcounts
+(cache entries + engine requests), retired -- never freed -- on last drop,
+so the attached SMR policy, not refcounting, decides when recycling is safe.
+"""
+
+import pytest
+
+from repro.core.sim.engine import UseAfterFree
+from repro.runtime.block_pool import BlockPool
+from repro.runtime.reclaim import SimulatedSMRPolicy, UnsafeEagerPolicy
+
+
+def make_pool(**kw):
+    kw.setdefault("n_engines", 3)
+    kw.setdefault("reclaim_threshold", 4)
+    return BlockPool(32, **kw)
+
+
+def test_share_acquire_release_lifecycle():
+    pool = make_pool()
+    blocks = pool.allocate(0, 2)
+    assert pool.share_prefix(0, "p", blocks, payload="snap")
+    assert pool.shared_blocks == 2 and pool.prefix_entries == 1
+
+    hit = pool.acquire_prefix(1, "p")
+    assert hit is not None
+    got, payload = hit
+    assert got == blocks and payload == "snap"
+    assert set(blocks) <= pool._live_local[1]
+
+    # both engines drop their request refs: the cache entry still holds the
+    # blocks -- cached, not leaked, not retired
+    pool.release_shared(0, blocks)
+    pool.release_shared(1, blocks)
+    assert pool.retired_blocks == 0 and pool.shared_blocks == 2
+    assert pool.check_no_leaks()
+
+    # eviction drops the last reference: blocks retire (NOT freed directly)
+    pool.evict_prefixes(0)
+    assert pool.prefix_entries == 0 and pool.shared_blocks == 0
+    assert pool.retired_blocks == 2
+    pool.reclaim()                       # quiescent: now they free
+    assert pool.stats.freed == 2
+    assert pool.check_no_leaks()
+
+
+def test_duplicate_share_returns_false():
+    pool = make_pool()
+    a = pool.allocate(0, 1)
+    b = pool.allocate(1, 1)
+    assert pool.share_prefix(0, "k", a)
+    assert not pool.share_prefix(1, "k", b)   # lost the race; b stays private
+    assert b[0] in pool._live_local[1] and b[0] not in pool._shared_ref
+
+
+def test_acquire_miss_counts():
+    pool = make_pool()
+    assert pool.acquire_prefix(0, "nope") is None
+    assert pool.stats.prefix_misses == 1 and pool.stats.prefix_hits == 0
+
+
+def test_same_engine_two_requests_share_one_block():
+    """Two requests on ONE engine acquiring the same prefix: the block must
+    stay in the engine's live set until BOTH release."""
+    pool = make_pool()
+    blocks = pool.allocate(0, 1)
+    pool.share_prefix(0, "p", blocks)
+    pool.release_shared(0, blocks)            # the sharing request finishes
+    pool.acquire_prefix(0, "p")
+    pool.acquire_prefix(0, "p")
+    pool.release_shared(0, blocks)
+    assert blocks[0] in pool._live_local[0], "second request still holds it"
+    pool.release_shared(0, blocks)
+    assert blocks[0] not in pool._live_local[0]
+    assert pool.shared_blocks == 1            # cache entry still holds it
+    assert pool.check_no_leaks()
+
+
+def test_lru_eviction_order():
+    pool = make_pool()
+    for i in range(3):
+        pool.share_prefix(0, f"k{i}", pool.allocate(0, 1))
+        pool.release_shared(0, pool._prefix_cache[f"k{i}"][0])
+    hit = pool.acquire_prefix(0, "k0")        # k0 -> MRU
+    pool.release_shared(0, hit[0])
+    assert pool.evict_prefixes(0, max_entries=2) == 2
+    assert pool.prefix_entries == 1
+    assert "k0" in pool._prefix_cache, "LRU eviction must spare the MRU entry"
+
+
+def test_overlapping_entries_share_cache_refs():
+    """A longer prefix entry reuses the blocks of a shorter one: the block
+    survives until EVERY entry containing it is evicted."""
+    pool = make_pool()
+    short = pool.allocate(0, 1)
+    pool.share_prefix(0, "ab", short)
+    ext = pool.allocate(0, 1)
+    pool.share_prefix(0, "abc", short + ext)  # short[0] now in two entries
+    pool.release_shared(0, short + ext)       # request refs gone
+    assert pool.evict_prefixes(0, max_entries=1) == 1      # evicts "ab"
+    assert short[0] in pool._shared_ref, "still held by the longer entry"
+    assert pool.retired_blocks == 0
+    pool.evict_prefixes(0)
+    assert pool.retired_blocks == 2
+    assert pool.check_no_leaks()
+
+
+def test_double_release_is_harmless():
+    """A second release of an already-released (or never-shared) block must
+    not push refcounts negative and spuriously re-retire a block that may
+    already be free or handed to another request."""
+    pool = make_pool()
+    blocks = pool.allocate(0, 2)
+    pool.share_prefix(0, "p", blocks)
+    pool.release_shared(0, blocks)
+    pool.evict_prefixes(0)                    # blocks now retired
+    assert pool.release_shared(0, blocks) == 0   # double release: no-op
+    assert pool.release_shared(1, [99]) == 0     # never-shared: no-op
+    pool.reclaim()
+    again = pool.allocate(1, pool.num_blocks)    # every block exactly once
+    assert len(set(again)) == pool.num_blocks
+    pool.retire(1, again)
+    assert pool.check_no_leaks()
+
+
+def test_release_without_cache_entry_retires_immediately():
+    pool = make_pool()
+    blocks = pool.allocate(0, 2)
+    pool.share_prefix(0, "p", blocks)
+    pool.acquire_prefix(1, "p")
+    pool.evict_prefixes(0)                    # cache ref gone; 2 request refs
+    assert pool.retired_blocks == 0
+    pool.release_shared(0, blocks)
+    assert pool.retired_blocks == 0
+    assert pool.release_shared(1, blocks) == 2   # last ref -> retired
+    assert pool.retired_blocks == 2
+    assert pool.check_no_leaks()
+
+
+def test_shared_block_protected_by_session_until_smr_agrees():
+    """The litmus the cache exists for: a reader session spans a shared
+    block; every reference drops and the entry is evicted; under an SMR
+    policy the block must survive until the session closes -- under the
+    unsafe policy the next touch is a hard UseAfterFree."""
+    # safe: any simulated scheme
+    pool = make_pool(policy=SimulatedSMRPolicy("HazardPtrPOP"))
+    blocks = pool.allocate(0, 2)
+    pool.share_prefix(0, "p", blocks)
+    pool.start_step(1)
+    pool.reserve(1, blocks)                   # reader session, no ownership
+    pool.touch(1, blocks)
+    pool.release_shared(0, blocks)
+    pool.evict_prefixes(0)                    # last ref -> retire under session
+    assert all(b not in pool._freeset for b in blocks)
+    pool.touch(1, blocks)                     # STILL protected
+    pool.end_step(1)
+    pool.start_step(0)
+    pool.end_step(0)
+    pool.reclaim()
+    assert pool.stats.freed >= 2
+    assert pool.check_no_leaks()
+
+    # unsafe: same sequence, the touch after eviction must trip
+    pool = make_pool(policy=UnsafeEagerPolicy())
+    blocks = pool.allocate(0, 2)
+    pool.share_prefix(0, "p", blocks)
+    pool.start_step(1)
+    pool.reserve(1, blocks)
+    pool.touch(1, blocks)
+    pool.release_shared(0, blocks)
+    pool.evict_prefixes(0)                    # eager free under open session
+    with pytest.raises(UseAfterFree):
+        pool.touch(1, blocks)

@@ -3,7 +3,6 @@ multiplication on scans, collective ring formulas, DUS/movement handling."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.roofline.hlo_stats import analyze
 from repro.roofline.analysis import collective_bytes

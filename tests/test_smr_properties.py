@@ -16,7 +16,6 @@ hypothesis = pytest.importorskip(
     "(pip install -e '.[dev]')")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.sim.engine import Costs
 from repro.core.smr.registry import PAPER_SET
 from repro.core.workload import run_trial
 

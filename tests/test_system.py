@@ -1,7 +1,6 @@
 """End-to-end system tests: train a tiny model -> checkpoint -> restore ->
 serve it through the paged engine with POP block-pool reclamation."""
 
-import numpy as np
 import pytest
 
 from repro.configs.base import ArchConfig, dense_stack
@@ -64,3 +63,34 @@ def test_serve_deterministic_greedy(trained):
     assert a.done.wait(timeout=120) and b.done.wait(timeout=120)
     eng.stop()
     assert a.out == b.out, "greedy decode must be deterministic"
+
+
+def test_serve_multi_engine_prefix_cache(trained):
+    """Sharded runtime end-to-end: 2 engine workers + reclaimer over one
+    pool, prefix cache on.  Shared-prefix prompts must hit the cache, skip
+    prefill for the cached pages, decode identically to fresh prefills, and
+    leave the pool leak-free after eviction + reclamation."""
+    tr, out = trained
+    params = out["params"]
+    eng = ServeEngine(TINY, params, max_batch=2, page_size=8, max_seq=64,
+                      num_pages=64, n_engines=2, prefix_cache=True)
+    eng.start()
+    prefix = [2, 4, 6, 8, 1, 3, 5, 7]           # exactly one full page
+    reqs = [eng.submit(prefix + [9 + i % 2], max_new=5) for i in range(6)]
+    for r in reqs:
+        assert r.done.wait(timeout=120), "generation timed out"
+        assert len(r.out) == 5
+    eng.stop()
+    assert eng.error is None, f"engine failed: {eng.error}"
+    s = eng.pool.stats
+    assert s.prefix_hits > 0, "shared prompts never hit the prefix cache"
+    assert sum(w.prefill_tokens_skipped for w in eng.workers) > 0
+    # identical prompts must decode identically whether the prefix came
+    # from a cache hit or a fresh prefill, on any engine
+    outs = {}
+    for r in reqs:
+        outs.setdefault(tuple(r.prompt), set()).add(tuple(r.out))
+    assert all(len(v) == 1 for v in outs.values()), outs
+    eng.pool.evict_prefixes(0)
+    eng.pool.reclaim()
+    assert eng.pool.check_no_leaks()

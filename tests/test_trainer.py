@@ -2,11 +2,8 @@
 the exact stream, stragglers are flagged, async checkpointing reserves
 buffers correctly."""
 
-import time
 
-import jax
 import numpy as np
-import pytest
 
 from repro.configs.base import ArchConfig, dense_stack
 from repro.data.pipeline import DataConfig, TokenPipeline
