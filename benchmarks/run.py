@@ -74,7 +74,8 @@ def main() -> None:
     #    + the shared-prefix allocation comparison) --
     from benchmarks.serve_reclaim import QUICK_SCHEMES, run_grid, to_csv
     sr = _quiet(run_grid, schemes=QUICK_SCHEMES, engines=(1, 2),
-                pressures=("high",), duration=0.2)
+                pressures=("high",), duration=0.2, sim_backend="vec",
+                asym=False)
     csv.extend(to_csv(sr))
     Path("results/serve_reclaim.json").write_text(json.dumps(sr, indent=1))
 

@@ -24,12 +24,23 @@ garbage-bound axis) and **per-engine throughput** (steps/s min/mean across
 engines -- fairness under ping fan-out), plus blocks allocated per request
 for the sharing comparison.
 
+Simulator backend: ``--sim-backend vec`` runs the simulated schemes on the
+batch-stepped numpy backend (core/sim/vec.py) instead of the generator
+discrete-event engine -- ~5-10x the step throughput, which is what lets
+the engines axis extend to 8.  The full grid also emits one
+**asymmetric-costs** row per simulated scheme: the upper half of the
+engine readers live on a "remote socket" (4x ping/signal delivery
+latency, 2x memory latency via ``Costs.asymmetric``), the regime where
+publish-on-ping's contrast with fence-per-read is widest.
+
     PYTHONPATH=src python benchmarks/serve_reclaim.py [--quick] [--engines 2]
+    PYTHONPATH=src python benchmarks/serve_reclaim.py --sim-backend vec
 
 CSV schema (matched to benchmarks/run.py): ``name,us_per_call,derived``
-where name = serve_reclaim:<scheme>:e<engines>:<pressure>[:shared[+cache]],
-us_per_call is wall microseconds per engine step, and derived packs
-peak_unreclaimed/freed/pings/publishes/alloc_per_req/uaf.
+where name = serve_reclaim:<scheme>:e<engines>:<pressure>
+[:shared[+cache]][:asym][@vec], us_per_call is wall microseconds per
+engine step, and derived packs peak_unreclaimed/freed/pings/publishes/
+alloc_per_req/uaf.
 """
 
 from __future__ import annotations
@@ -41,9 +52,9 @@ import threading
 import time
 from pathlib import Path
 
-from repro.core.sim.engine import UseAfterFree
+from repro.core.sim.engine import Costs, UseAfterFree
 from repro.runtime.block_pool import BlockPool, OutOfBlocks
-from repro.runtime.reclaim import make_policy
+from repro.runtime.reclaim import is_simulated, make_policy
 from repro.serve.worker import Reclaimer
 
 # native EpochPOP pool + a representative slice of the registry
@@ -60,12 +71,29 @@ PRIVATE_BLOCKS = 2                     # private blocks per shared-wl request
 def run_one(scheme: str, n_engines: int, pressure: str = "high",
             workload: str = "private", prefix_cache: bool = False,
             duration: float = 0.5, blocks_per_req: int = 4,
-            window: int = 3, seed: int = 0) -> dict:
+            window: int = 3, seed: int = 0, sim_backend: str = "gen",
+            asym: bool = False) -> dict:
     """One grid cell: n_engines real reader threads + 1 reclaimer thread."""
     num_blocks = PRESSURE[pressure] * n_engines
+    # the native pool policy never touches the simulator; don't stamp its
+    # rows with a backend or cost model they didn't use (keeps row names
+    # comparable across runs with different --sim-backend)
+    if not is_simulated(scheme):
+        sim_backend = None
+        asym = False
+    costs = None
+    if asym:
+        # upper half of the readers live on a remote "socket": 4x ping
+        # delivery latency, 2x memory latency; the reclaimer (engine id
+        # n_engines) stays local
+        remote = range(n_engines - n_engines // 2, n_engines)
+        costs = Costs.asymmetric(n_engines + 1, remote=remote,
+                                 ping_factor=4.0, mem_factor=2.0)
     pool = BlockPool(num_blocks, n_engines=n_engines + 1,
                      reclaim_threshold=max(4, num_blocks // 8),
-                     pressure_factor=2, policy=make_policy(scheme))
+                     pressure_factor=2,
+                     policy=make_policy(scheme, backend=sim_backend,
+                                        costs=costs))
     reclaimer = Reclaimer(pool, engine_id=n_engines, interval_s=0.001)
     stop = threading.Event()
     steps = [0] * n_engines
@@ -166,6 +194,7 @@ def run_one(scheme: str, n_engines: int, pressure: str = "high",
     return {
         "scheme": scheme, "engines": n_engines, "pressure": pressure,
         "workload": workload, "prefix_cache": prefix_cache,
+        "sim_backend": sim_backend, "asym": asym,
         "steps": total, "requests": n_reqs,
         "us_per_step": 1e6 * elapsed / max(total, 1),
         "steps_per_s_per_engine": per_engine,
@@ -185,15 +214,19 @@ def run_one(scheme: str, n_engines: int, pressure: str = "high",
 
 def run_grid(schemes=DEFAULT_SCHEMES, engines=(1, 2, 4),
              pressures=("low", "high"), duration: float = 0.5,
-             shared: bool = True) -> list:
+             shared: bool = True, sim_backend: str = "gen",
+             asym: bool = True) -> list:
     """scheme x engines x pressure on the private workload, plus (when
     ``shared``) a cache-on/cache-off shared-prefix pair per scheme -- the
-    allocation-reduction comparison from the acceptance criteria."""
+    allocation-reduction comparison from the acceptance criteria -- plus
+    (when ``asym``) one asymmetric-costs cell per simulated scheme with
+    the remote readers paying 4x ping latency."""
     rows = []
     for scheme in schemes:
         for n in engines:
             for p in pressures:
-                r = run_one(scheme, n, p, duration=duration)
+                r = run_one(scheme, n, p, duration=duration,
+                            sim_backend=sim_backend)
                 rows.append(r)
                 print(f"# {scheme:14s} e={n} {p:4s} "
                       f"{r['us_per_step']:9.1f} us/step "
@@ -210,9 +243,11 @@ def run_grid(schemes=DEFAULT_SCHEMES, engines=(1, 2, 4),
             # already covers high-pressure robustness
             n = max(engines) if 2 not in engines else 2
             base = run_one(scheme, n, "low", workload="shared-prefix",
-                           prefix_cache=False, duration=duration)
+                           prefix_cache=False, duration=duration,
+                           sim_backend=sim_backend)
             cached = run_one(scheme, n, "low", workload="shared-prefix",
-                             prefix_cache=True, duration=duration)
+                             prefix_cache=True, duration=duration,
+                             sim_backend=sim_backend)
             rows += [base, cached]
             print(f"# {scheme:14s} e={n} shared-prefix alloc/req "
                   f"{base['alloc_per_req']:.2f} -> {cached['alloc_per_req']:.2f} "
@@ -225,6 +260,21 @@ def run_grid(schemes=DEFAULT_SCHEMES, engines=(1, 2, 4),
             assert cached["alloc_per_req"] < base["alloc_per_req"], \
                 f"prefix cache did not reduce allocations under {scheme}: " \
                 f"{cached['alloc_per_req']:.2f} vs {base['alloc_per_req']:.2f}"
+        if asym and scheme != "EpochPOP-pool" and max(engines) >= 2:
+            # asymmetric sockets only exist for the simulated schemes (the
+            # native pool policy has no simulated cost model)
+            n = max(engines)
+            r = run_one(scheme, n, "high", duration=duration,
+                        sim_backend=sim_backend, asym=True)
+            rows.append(r)
+            print(f"# {scheme:14s} e={n} asym "
+                  f"{r['us_per_step']:9.1f} us/step "
+                  f"per-engine min/mean {r['steps_per_s_min']:7.0f}/"
+                  f"{r['steps_per_s_mean']:7.0f} steps/s "
+                  f"peak_unreclaimed={r['peak_unreclaimed']:4d} "
+                  f"pings={r['pings']:5d} uaf={r['uaf']}")
+            assert r["uaf"] == 0, \
+                f"use-after-free under {scheme} (asym): {r['errors']}"
     return rows
 
 
@@ -234,6 +284,10 @@ def to_csv(rows) -> list:
         tag = f"serve_reclaim:{r['scheme']}:e{r['engines']}:{r['pressure']}"
         if r["workload"] == "shared-prefix":
             tag += ":shared" + ("+cache" if r["prefix_cache"] else "")
+        if r.get("asym"):
+            tag += ":asym"
+        if r.get("sim_backend") not in (None, "gen"):
+            tag += "@" + r["sim_backend"]
         out.append(
             f"{tag},{r['us_per_step']:.2f},"
             f"peak_unreclaimed={r['peak_unreclaimed']};freed={r['freed']};"
@@ -249,6 +303,9 @@ def main():
                     help="small grid for CI smoke (3 schemes, high pressure)")
     ap.add_argument("--engines", type=int, default=None, metavar="N",
                     help="restrict the engines axis to a single value")
+    ap.add_argument("--sim-backend", default="gen", choices=("gen", "vec"),
+                    help="simulator backend for the simulated schemes; "
+                         "'vec' extends the default engines axis to 8")
     ap.add_argument("--duration", type=float, default=None)
     ap.add_argument("--out", default="results/serve_reclaim.json")
     args = ap.parse_args()
@@ -256,10 +313,16 @@ def main():
     if args.quick:
         rows = run_grid(schemes=QUICK_SCHEMES, engines=engines or (1, 2),
                         pressures=("high",),
-                        duration=args.duration or 0.2)
+                        duration=args.duration or 0.2,
+                        sim_backend=args.sim_backend, asym=False)
     else:
-        rows = run_grid(engines=engines or (1, 2, 4),
-                        duration=args.duration or 0.5)
+        # the vec backend is what makes the 8-engine column affordable
+        full = (1, 2, 4, 8) if args.sim_backend == "vec" else (1, 2, 4)
+        rows = run_grid(engines=engines or full,
+                        duration=args.duration or 0.5,
+                        sim_backend=args.sim_backend)
+    # regenerate (not append): the file is the CURRENT grid, superseded
+    # rows from earlier runs are dropped wholesale
     Path(args.out).parent.mkdir(parents=True, exist_ok=True)
     Path(args.out).write_text(json.dumps(rows, indent=1))
     print("name,us_per_call,derived")

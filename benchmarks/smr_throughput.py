@@ -18,7 +18,8 @@ from repro.core.workload import run_trial
 
 def run(structures=("HML", "LL", "HMHT", "DGT"), schemes=PAPER_SET,
         threads=(1, 2, 4, 8), workloads=("update", "read"),
-        key_range=128, duration=300_000.0, seed=7, out=None):
+        key_range=128, duration=300_000.0, seed=7, out=None,
+        backend="gen"):
     results = []
     for ds in structures:
         for wl in workloads:
@@ -26,10 +27,11 @@ def run(structures=("HML", "LL", "HMHT", "DGT"), schemes=PAPER_SET,
                 for scheme in schemes:
                     r = run_trial(ds, scheme, n, workload=wl,
                                   key_range=key_range, duration=duration,
-                                  seed=seed)
+                                  seed=seed, backend=backend)
                     rec = {
                         "structure": ds, "workload": wl, "threads": n,
                         "scheme": scheme, "throughput": r.throughput,
+                        "sim_backend": backend,
                         "ops": r.ops, "fences": r.fences,
                         "signals": r.signals_sent, "publishes": r.publishes,
                         "restarts": r.restarts,
@@ -75,13 +77,18 @@ def summarize(results):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--sim-backend", default="gen", choices=("gen", "vec"),
+                    help="simulator backend: 'gen' (discrete-event "
+                         "reference) or 'vec' (batch-stepped numpy, "
+                         "~5-10x faster wall clock at equal sim cycles)")
     ap.add_argument("--out", default="results/smr_throughput.json")
     args = ap.parse_args()
     if args.quick:
         res = run(structures=("HML", "HMHT"), threads=(2, 4),
-                  duration=150_000.0, out=args.out)
+                  duration=150_000.0, out=args.out,
+                  backend=args.sim_backend)
     else:
-        res = run(out=args.out)
+        res = run(out=args.out, backend=args.sim_backend)
     print(json.dumps(summarize(res), indent=1))
 
 

@@ -8,6 +8,7 @@ feature).
     PYTHONPATH=src python examples/serve_paged.py --engines 2 --prefix-cache
     PYTHONPATH=src python examples/serve_paged.py --smr HazardPtrPOP   # any registry scheme
     PYTHONPATH=src python examples/serve_paged.py --smr EBR
+    PYTHONPATH=src python examples/serve_paged.py --smr EpochPOP --sim-backend vec
 """
 
 import argparse
@@ -34,6 +35,10 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share page-aligned prompt prefixes across "
                          "requests/engines (blocks retire through SMR)")
+    ap.add_argument("--sim-backend", default="gen", choices=("gen", "vec"),
+                    help="simulator backend for --smr schemes: 'gen' "
+                         "(discrete-event reference) or 'vec' (batch-stepped "
+                         "numpy arrays, ~5-10x faster)")
     ap.add_argument("--requests", type=int, default=10)
     args = ap.parse_args()
 
@@ -42,7 +47,8 @@ def main():
                      dtype="float32")
     params = init_params(cfg, jax.random.PRNGKey(0))
     pool = BlockPool(128, n_engines=args.engines + 1, reclaim_threshold=8,
-                     pressure_factor=2, policy=make_policy(args.smr))
+                     pressure_factor=2,
+                     policy=make_policy(args.smr, backend=args.sim_backend))
     eng = ServeEngine(cfg, params, max_batch=4, page_size=8, max_seq=64,
                       pool=pool, n_engines=args.engines,
                       prefix_cache=args.prefix_cache)

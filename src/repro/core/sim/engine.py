@@ -27,8 +27,9 @@ from __future__ import annotations
 
 import heapq
 import random
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, Generator, List, Optional, Tuple
+from dataclasses import dataclass, fields, replace
+from typing import (Any, Callable, Dict, Generator, List, Mapping, Optional,
+                    Sequence, Tuple)
 
 NULL = 0
 
@@ -62,21 +63,85 @@ class Costs:
     absolute numbers only matter relative to each other.
     """
 
-    load: int = 2
-    store: int = 4            # shared store (coherence traffic)
-    local: int = 1            # thread-local reservation bookkeeping (POP READ)
-    fence: int = 40           # store-load fence (drain store buffer)
-    cas: int = 30
-    faa: int = 30
-    atomic_store: int = 8     # store + immediate drain of that entry
-    membarrier: int = 4000    # sys_membarrier() on the reclaimer (HPAsym)
-    signal_send: int = 800    # pthread_kill per target
-    signal_latency: int = 6000  # deliver + schedule handler (bounded, Asm. 1)
-    handler_overhead: int = 400  # kernel frame setup/teardown
-    spin: int = 12            # one iteration of a wait loop (incl. pause)
-    work: int = 1
-    drain_latency: int = 90   # store buffer residency before async drain
-    drain_jitter: int = 60
+    load: float = 2
+    store: float = 4          # shared store (coherence traffic)
+    local: float = 1          # thread-local reservation bookkeeping (POP READ)
+    fence: float = 40         # store-load fence (drain store buffer)
+    cas: float = 30
+    faa: float = 30
+    atomic_store: float = 8   # store + immediate drain of that entry
+    membarrier: float = 4000  # sys_membarrier() on the reclaimer (HPAsym)
+    signal_send: float = 800  # pthread_kill per target
+    signal_latency: float = 6000  # deliver + schedule handler (bounded, Asm. 1)
+    handler_overhead: float = 400  # kernel frame setup/teardown
+    spin: float = 12          # one iteration of a wait loop (incl. pause)
+    work: float = 1
+    drain_latency: float = 90  # store buffer residency before async drain
+    drain_jitter: float = 60
+    #: Optional per-thread cost vector: entry ``i`` is a mapping of field
+    #: overrides for thread ``i`` (or None to use the base costs).  This is
+    #: how the serving grid models N engine workers on distinct "sockets":
+    #: remote readers pay higher memory latency / fence cost / ping delivery
+    #: latency than local ones.  The vector length must equal the engine's
+    #: thread count -- engines validate it (no silent broadcasting).
+    overrides: Optional[Sequence[Optional[Mapping[str, float]]]] = None
+
+    def validate_for(self, nthreads: int) -> None:
+        """Reject a per-thread override vector whose length is not exactly
+        the thread count.  Broadcasting a short vector would silently give
+        the unlisted threads base costs -- the asymmetric-cost experiments
+        depend on knowing exactly which thread pays what."""
+        ov = self.overrides
+        if ov is not None and len(ov) != nthreads:
+            raise ValueError(
+                f"per-thread costs vector has {len(ov)} entries but the "
+                f"engine has {nthreads} threads; pass exactly one override "
+                f"(or None) per thread -- short vectors are not broadcast")
+
+    def for_thread(self, tid: int) -> "Costs":
+        """The effective cost table for thread ``tid`` (self when uniform)."""
+        ov = self.overrides
+        if not ov:
+            return self
+        if not 0 <= tid < len(ov):
+            raise ValueError(
+                f"thread {tid} outside per-thread costs vector of "
+                f"length {len(ov)}")
+        o = ov[tid]
+        if not o:
+            return self
+        known = {f.name for f in fields(self)} - {"overrides"}
+        bad = set(o) - known
+        if bad:
+            raise ValueError(
+                f"unknown cost fields in per-thread override: {sorted(bad)}")
+        return replace(self, overrides=None, **o)
+
+    @classmethod
+    def asymmetric(cls, nthreads: int, remote: Sequence[int] = (),
+                   ping_factor: float = 4.0, mem_factor: float = 1.0,
+                   fence_factor: float = 1.0,
+                   base: Optional["Costs"] = None) -> "Costs":
+        """Two-socket NUMA-style model: threads in ``remote`` pay scaled
+        memory latency, fence cost, and ping/signal delivery latency."""
+        base = base or cls()
+        rs = set(remote)
+        ov: List[Optional[Dict[str, float]]] = []
+        for tid in range(nthreads):
+            if tid not in rs:
+                ov.append(None)
+                continue
+            ov.append({
+                "load": base.load * mem_factor,
+                "store": base.store * mem_factor,
+                "atomic_store": base.atomic_store * mem_factor,
+                "cas": base.cas * mem_factor,
+                "faa": base.faa * mem_factor,
+                "fence": base.fence * fence_factor,
+                "signal_send": base.signal_send * ping_factor,
+                "signal_latency": base.signal_latency * ping_factor,
+            })
+        return replace(base, overrides=ov)
 
 
 @dataclass
@@ -294,6 +359,10 @@ class Engine:
     ):
         self.n = nthreads
         self.costs = costs or Costs()
+        # per-thread cost vectors (asymmetric sockets); length-validated so a
+        # short override list errors instead of silently broadcasting
+        self.costs.validate_for(nthreads)
+        self.costs_of = [self.costs.for_thread(i) for i in range(nthreads)]
         self.seed = seed
         self.rng = random.Random(seed)
         self.mem = Memory(nthreads)
@@ -328,7 +397,10 @@ class Engine:
         tgt = self.threads[target_tid]
         if tgt.done:
             return  # pthread_kill returns ESRCH; reclaimer skips dead threads
-        at = sender.clock + self.costs.signal_latency * (1 + self.rng.random() * 0.5)
+        # delivery latency is a property of the TARGET's socket (the ping has
+        # to cross to wherever the reader lives)
+        lat = self.costs_of[target_tid].signal_latency
+        at = sender.clock + lat * (1 + self.rng.random() * 0.5)
         # coalesce: POSIX keeps at most one pending instance per signo
         if tgt.pending_signal_at is None or at < tgt.pending_signal_at:
             tgt.pending_signal_at = at
@@ -365,7 +437,7 @@ class Engine:
         if tgt.done or tgt.signal_handler is None:
             return
         tgt.pending_signal_at = None
-        tgt.clock += self.costs.handler_overhead
+        tgt.clock += self.costs_of[tgt.tid].handler_overhead
         h = tgt.signal_handler(tgt)
         try:
             op = next(h)
@@ -381,7 +453,7 @@ class Engine:
         return c * (1.0 + self.rng.random() * self.jitter)
 
     def _exec(self, t: ThreadCtx, op: Tuple) -> Any:
-        mem, costs = self.mem, self.costs
+        mem, costs = self.mem, self.costs_of[t.tid]
         kind = op[0]
         now = t.clock
         if kind == "load":
@@ -507,7 +579,7 @@ class Engine:
                 and not (t.frames and t.frames[-1].is_handler)
             ):
                 t.pending_signal_at = None
-                t.clock += self.costs.handler_overhead
+                t.clock += self.costs_of[t.tid].handler_overhead
                 # The handler itself decides whether to publish (POP) or to
                 # request a neutralizing unwind (NBR) by setting
                 # ``t.pending_neutralize`` -- the unwind is performed when the

@@ -11,6 +11,7 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional
 
+from repro.core.sim import make_engine
 from repro.core.sim.engine import Costs, Engine, Neutralized, ThreadCtx
 from repro.core.smr.registry import make_scheme
 from repro.core.structures.external_bst import ExternalBST
@@ -147,8 +148,10 @@ def run_trial(
     epoch_freq: int = 8,
     preempt_prob: float = 0.0,
     max_steps: int = 80_000_000,
+    backend: str = "gen",
 ) -> TrialResult:
-    engine = Engine(nthreads, costs=costs, seed=seed, preempt_prob=preempt_prob)
+    engine = make_engine(nthreads, backend=backend, costs=costs, seed=seed,
+                         preempt_prob=preempt_prob)
     smr = make_scheme(
         scheme_name, engine, max_hp=4, reclaim_freq=reclaim_freq, epoch_freq=epoch_freq
     )

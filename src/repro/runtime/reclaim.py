@@ -37,7 +37,8 @@ import threading
 import time
 from typing import Dict, List, Optional, Sequence, Set
 
-from repro.core.sim.engine import Allocator, Costs, Engine, UseAfterFree
+from repro.core.sim import make_engine
+from repro.core.sim.engine import Allocator, Costs, UseAfterFree
 
 MAX_EPOCH = 1 << 60
 
@@ -262,13 +263,15 @@ class SimulatedSMRPolicy(ReclaimPolicy):
 
     def __init__(self, scheme: str = "HazardPtrPOP", *, seed: int = 0,
                  reclaim_freq: Optional[int] = None, epoch_freq: int = 4,
-                 costs: Optional[Costs] = None) -> None:
+                 costs: Optional[Costs] = None,
+                 backend: str = "gen") -> None:
         super().__init__()
         self.scheme_name = scheme
         self.seed = seed
         self.reclaim_freq = reclaim_freq
         self.epoch_freq = epoch_freq
         self.costs = costs
+        self.backend = backend
         self.name = f"sim-{scheme}"
 
     def attach(self, pool) -> None:
@@ -276,7 +279,12 @@ class SimulatedSMRPolicy(ReclaimPolicy):
 
         super().attach(pool)
         n = pool.n_engines
-        self.sim = Engine(n, costs=self.costs, seed=self.seed)
+        # Per-thread (asymmetric-socket) cost vectors are sized for the
+        # pool's engine slots; the backend selects gen (discrete-event
+        # reference) or vec (batch-stepped numpy arrays, ~5-10x faster --
+        # what lets the serve_reclaim grid sweep past 4 engines)
+        self.sim = make_engine(n, backend=self.backend, costs=self.costs,
+                               seed=self.seed)
         self.sim.mem.alloc.recycle = False      # deterministic UAF tripwire
         # a session may reserve every block in the pool
         self.smr = make_scheme(
@@ -339,12 +347,21 @@ class SimulatedSMRPolicy(ReclaimPolicy):
     def touch(self, engine: int, blocks: Sequence[int]) -> None:
         with self._mtx:
             t = self.sim.threads[engine]
+            addrs = []
             for b in blocks:
                 addr = self._node_of.get(b)
                 if addr is None:
                     raise UseAfterFree(engine, b, "touch")
-                # the load IS the check: freed node cells raise in the sim
-                self.sim.drive(engine, t.load(addr))
+                addrs.append(addr)
+            # the load IS the check: freed node cells raise in the sim.
+            # The vec backend turns the whole working set into ONE numpy
+            # gather with a vectorized use-after-free sweep.
+            load_many = getattr(t, "load_many", None)
+            if load_many is not None:
+                self.sim.drive(engine, load_many(addrs))
+            else:
+                for addr in addrs:
+                    self.sim.drive(engine, t.load(addr))
 
     # -- reclamation --
 
@@ -402,12 +419,36 @@ def supported_schemes() -> List[str]:
     return [s for s in SCHEMES if s != "HP-broken"]
 
 
+#: keyword arguments that only make sense for SimulatedSMRPolicy; the
+#: native/unsafe policies drop them so callers can thread --sim-backend and
+#: per-thread costs through uniformly
+_SIM_ONLY_KW = ("backend", "costs", "seed", "reclaim_freq", "epoch_freq")
+
+#: policy names make_policy resolves WITHOUT a simulator (the native pool
+#: adaptation and the deliberately-broken demo); the single source of truth
+#: for callers that must know whether sim-backend/cost knobs apply
+NATIVE_POLICY_NAMES = (None, "", "EpochPOP-pool", "pool",
+                       "unsafe", "unsafe-eager")
+
+
+def is_simulated(name: Optional[str]) -> bool:
+    """True when ``make_policy(name)`` builds a SimulatedSMRPolicy (so the
+    simulator backend and cost-model kwargs actually take effect)."""
+    return name not in NATIVE_POLICY_NAMES
+
+
 def make_policy(name: Optional[str], **kw) -> ReclaimPolicy:
     """'EpochPOP-pool'/None -> native policy; 'unsafe' -> the broken demo;
-    any registry scheme name -> SimulatedSMRPolicy over that scheme."""
+    any registry scheme name -> SimulatedSMRPolicy over that scheme.
+    Simulator-only kwargs (backend, costs, ...) are ignored by the
+    simulator-free policies."""
     if name in (None, "", "EpochPOP-pool", "pool"):
-        return EpochPOPPolicy()
+        for k in _SIM_ONLY_KW:
+            kw.pop(k, None)
+        return EpochPOPPolicy(**kw)
     if name in ("unsafe", "unsafe-eager"):
+        for k in _SIM_ONLY_KW:
+            kw.pop(k, None)
         return UnsafeEagerPolicy()
     safe = supported_schemes()
     if name not in safe:

@@ -65,14 +65,27 @@ class ServeEngine:
                  max_seq: int = 256, pool: Optional[BlockPool] = None,
                  smr: Optional[str] = None, n_engines: int = 1,
                  prefix_cache: bool = False,
-                 reclaim_interval_s: float = 0.002):
+                 reclaim_interval_s: float = 0.002,
+                 sim_backend: str = "gen", sim_costs=None):
         self.cfg = cfg
         self.params = params
         if pool is None:
             from repro.runtime.reclaim import make_policy
-            # one engine slot per worker + one for the dedicated reclaimer
+            # one engine slot per worker + one for the dedicated reclaimer;
+            # sim_backend/sim_costs select the simulator backend and the
+            # (possibly per-engine asymmetric) cost model when ``smr`` names
+            # a simulated scheme -- the native pool policy ignores them
             pool = BlockPool(num_pages, n_engines=n_engines + 1,
-                             reclaim_threshold=16, policy=make_policy(smr))
+                             reclaim_threshold=16,
+                             policy=make_policy(smr, backend=sim_backend,
+                                                costs=sim_costs))
+        elif sim_backend != "gen" or sim_costs is not None:
+            # a caller-supplied pool carries its own policy: the sim knobs
+            # would be dead letters, so refuse rather than mismeasure
+            raise ValueError(
+                "sim_backend/sim_costs only apply when ServeEngine builds "
+                "the pool; configure them on the supplied pool's policy "
+                "instead")
         if pool.n_engines < n_engines:
             raise ValueError(
                 f"pool has {pool.n_engines} engine slots, need {n_engines}")

@@ -1,0 +1,458 @@
+"""Cross-backend equivalence, litmus, and step-throughput for the
+vectorized simulator backend (core/sim/vec.py).
+
+Three layers:
+
+* **exact equivalence** -- single-threaded runs have no scheduling freedom,
+  so with jitter off the two backends must produce bit-identical op
+  counts, stats, reclaim counts, AND final clocks for every registered
+  scheme;
+* **schedule-independent equivalence** -- at 8 threads the backends
+  interleave differently (event-ordered vs horizon-bounded lockstep), so
+  the multi-thread workload is built so its op/retire/reclaim counts are
+  invariants of ANY legal schedule (fixed iterations, per-thread-disjoint
+  nodes, reclaim_freq=1), and those must match exactly, with zero
+  tripwires;
+* **the litmus** -- every scheme in the registry must survive the paper's
+  canonical use-after-free interleaving on the vec backend, and the
+  deliberately fence-less HP-broken must still be CAUGHT (the vectorized
+  memory model stays weak enough to express the bug class).
+
+Plus the wall-clock assertion the backend exists for: >= 5x step
+throughput over the generator engine at 8 threads on the paper's
+fence-free read path.
+"""
+
+import time
+
+import pytest
+
+from repro.core.sim import BACKENDS, make_engine
+from repro.core.sim.engine import Costs, Engine, Neutralized, UseAfterFree
+from repro.core.sim.vec import VecEngine
+from repro.core.smr.registry import SCHEMES, make_scheme
+
+ALL_SCHEMES = list(SCHEMES)
+SAFE_SCHEMES = [s for s in ALL_SCHEMES if s != "HP-broken"]
+#: schemes whose multi-thread free counts are schedule-independent under
+#: the disjoint workload (pointer reservations never alias across threads);
+#: era/epoch schemes can pin a neighbor's node through the shared era space
+PTR_EXACT = ["HP", "HPAsym", "HazardPtrPOP", "NBR+"]
+
+KEY = 0
+
+
+# ---------------------------------------------------------------------------
+# backend registry + per-thread costs plumbing
+# ---------------------------------------------------------------------------
+
+def test_backend_registry():
+    assert set(BACKENDS) == {"gen", "vec"}
+    assert isinstance(make_engine(2), Engine)
+    assert isinstance(make_engine(2, backend="vec"), VecEngine)
+    with pytest.raises(ValueError, match="unknown sim backend"):
+        make_engine(2, backend="jit")
+
+
+@pytest.mark.parametrize("backend", ["gen", "vec"])
+def test_costs_vector_length_is_validated(backend):
+    short = Costs(overrides=[None, {"load": 9}])
+    with pytest.raises(ValueError, match="not broadcast"):
+        make_engine(4, backend=backend, costs=short)
+    with pytest.raises(ValueError, match="not broadcast"):
+        make_engine(1, backend=backend, costs=short)
+    # exact length is accepted, and threads resolve their own table
+    eng = make_engine(2, backend=backend, costs=short)
+    assert eng.costs_of[0].load == Costs().load
+    assert eng.costs_of[1].load == 9
+
+
+def test_costs_unknown_override_field_rejected():
+    with pytest.raises(ValueError, match="unknown cost fields"):
+        Costs(overrides=[{"lod": 3}]).for_thread(0)
+
+
+def test_costs_asymmetric_builder():
+    c = Costs.asymmetric(4, remote=(2, 3), ping_factor=4.0, mem_factor=2.0)
+    base = Costs()
+    assert c.for_thread(0) is c.for_thread(1) is c
+    for tid in (2, 3):
+        ct = c.for_thread(tid)
+        assert ct.signal_latency == base.signal_latency * 4.0
+        assert ct.signal_send == base.signal_send * 4.0
+        assert ct.load == base.load * 2.0
+        assert ct.fence == base.fence  # fence_factor defaults to 1
+    c.validate_for(4)
+    with pytest.raises(ValueError):
+        c.validate_for(5)
+
+
+@pytest.mark.parametrize("backend", ["gen", "vec"])
+def test_signal_delivery_uses_target_socket_latency(backend):
+    costs = Costs.asymmetric(3, remote=(2,), ping_factor=4.0)
+    eng = make_engine(3, backend=backend, costs=costs, seed=0)
+    sender = eng.threads[0]
+    eng.deliver_signal(sender, 1)
+    eng.deliver_signal(sender, 2)
+    local = eng.threads[1].pending_signal_at
+    remote = eng.threads[2].pending_signal_at
+    # 4x base latency dominates the <=1.5x jitter: remote lands later
+    assert remote > local
+    assert remote >= sender.clock + 4.0 * Costs().signal_latency
+
+
+# ---------------------------------------------------------------------------
+# exact single-thread equivalence (no scheduling freedom => bit-identical)
+# ---------------------------------------------------------------------------
+
+def _single_thread_fingerprint(backend, scheme_name, seed=1, duration=30_000.0):
+    eng = make_engine(1, backend=backend, seed=seed)
+    eng.jitter = 0.0                       # gen's only per-op nondeterminism
+    smr = make_scheme(scheme_name, eng, max_hp=2, reclaim_freq=4, epoch_freq=4)
+    eng.set_signal_handler(smr.handler)
+    base = eng.alloc_shared(1)
+
+    def body(t):
+        smr.thread_init(t)
+        node = yield from smr.alloc_node(t, 1)
+        yield from t.atomic_store(base, node)
+        ops = 0
+        while t.clock < duration:
+            yield from smr.start_op(t)
+            x = yield from smr.read(t, 0, base)
+            v = yield from t.load(x)
+            new = yield from smr.alloc_node(t, 1)
+            yield from t.store(new, v + 1)
+            yield from t.atomic_store(base, new)
+            yield from smr.end_op(t)
+            yield from smr.retire(t, x)
+            ops += 1
+        t.stats.ops = ops
+
+    eng.spawn(0, body)
+    eng.run()
+    t = eng.threads[0]
+    s = t.stats
+    return (s.ops, s.loads, s.stores, s.fences, s.cas, s.retired, s.freed,
+            smr.frees, smr.reclaim_calls, smr.garbage, round(t.clock, 6))
+
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_single_thread_backends_bit_identical(scheme):
+    gen = _single_thread_fingerprint("gen", scheme)
+    vec = _single_thread_fingerprint("vec", scheme)
+    assert gen == vec
+    assert gen[0] > 20                     # the trial actually ran
+
+
+# ---------------------------------------------------------------------------
+# multi-thread equivalence (schedule-independent invariants must match)
+# ---------------------------------------------------------------------------
+
+def _multi_thread_counts(backend, scheme_name, n=8, iters=6, seed=3):
+    """Fixed-iteration, per-thread-disjoint workload: every thread cycles
+    its own pointer cell through alloc/publish/read/retire.  With
+    reclaim_freq=1 the op count, retire count and reclaim-call count are
+    invariants of any legal schedule, so they must agree across backends
+    even though the interleavings differ."""
+    costs = Costs(drain_jitter=0, signal_latency=400, handler_overhead=40)
+    eng = make_engine(n, backend=backend, costs=costs, seed=seed)
+    eng.jitter = 0.0
+    smr = make_scheme(scheme_name, eng, max_hp=2, reclaim_freq=1, epoch_freq=3)
+    eng.set_signal_handler(smr.handler)
+    base = eng.alloc_shared(n)
+    is_nbr = scheme_name == "NBR+"
+
+    def body(t):
+        smr.thread_init(t)
+        node = yield from smr.alloc_node(t, 1)
+        yield from t.atomic_store(base + t.tid, node)
+        for _ in range(iters):
+            while True:
+                try:
+                    yield from smr.start_op(t)
+                    if is_nbr:
+                        # leave the restartable region before any mutation,
+                        # so a neutralizing ping can only force a clean retry
+                        yield from smr.enter_write(t, [])
+                    x = yield from smr.read(t, 0, base + t.tid)
+                    v = yield from t.load(x)
+                    new = yield from smr.alloc_node(t, 1)
+                    yield from t.store(new, v + 1)
+                    yield from t.atomic_store(base + t.tid, new)
+                    yield from smr.end_op(t)
+                except Neutralized:
+                    continue
+                break
+            yield from smr.retire(t, x)
+            t.stats.ops += 1
+
+    for tid in range(n):
+        eng.spawn(tid, body)
+    eng.run()
+    ops = sum(t.stats.ops for t in eng.threads)
+    retired = sum(t.stats.retired for t in eng.threads)
+    handled = sum(t.stats.signals_handled for t in eng.threads)
+    return {
+        "ops": ops, "retired": retired, "reclaim_calls": smr.reclaim_calls,
+        "frees": smr.frees, "garbage": smr.garbage, "handled": handled,
+    }
+
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_multi_thread_counts_match_across_backends(scheme):
+    n, iters = 8, 6
+    gen = _multi_thread_counts("gen", scheme, n=n, iters=iters)
+    vec = _multi_thread_counts("vec", scheme, n=n, iters=iters)
+    # completing run() at all means zero tripwires on both backends
+    assert gen["ops"] == vec["ops"] == n * iters
+    assert gen["retired"] == vec["retired"] == n * iters
+    assert gen["reclaim_calls"] == vec["reclaim_calls"]
+    if scheme == "NR":
+        assert gen["frees"] == vec["frees"] == 0
+        assert gen["garbage"] == vec["garbage"] == n * iters
+    elif scheme in PTR_EXACT:
+        # disjoint pointer reservations never pin a neighbor's node: every
+        # reclaim pass frees its whole list, on any schedule
+        assert gen["frees"] == vec["frees"] == n * iters
+    else:
+        # era/epoch schemes may carry interval-pinned nodes at exit; only
+        # accounting consistency and progress are schedule-independent
+        for r in (gen, vec):
+            assert 0 < r["frees"] <= n * iters
+            assert r["garbage"] == r["retired"] - r["frees"]
+    if SCHEMES[scheme].uses_signals and scheme != "NR":
+        assert gen["handled"] > 0 and vec["handled"] > 0
+
+
+# ---------------------------------------------------------------------------
+# the paper's use-after-free litmus, on both backends
+# ---------------------------------------------------------------------------
+
+def _litmus(backend, scheme_name, reader_delay_ops=40, seed=0):
+    """Reader reserves X then stalls; reclaimer unlinks + retires X with
+    reclaim_freq=1.  Safe schemes must keep X alive (or neutralize the
+    reader); the fence-less HP-broken must be caught by the tripwire."""
+    costs = Costs(drain_latency=10_000_000, drain_jitter=0, signal_latency=500)
+    eng = make_engine(2, backend=backend, costs=costs, seed=seed)
+    eng.jitter = 0.0
+    smr = make_scheme(scheme_name, eng, max_hp=2, reclaim_freq=1)
+    eng.set_signal_handler(smr.handler)
+
+    P = eng.alloc_shared(1)
+    X = eng.mem.alloc.alloc(2)
+    eng.mem.cells[X + KEY] = 42
+    eng.mem.cells[P] = X
+    out = {}
+
+    def reader(t):
+        smr.thread_init(t)
+        while True:
+            try:
+                yield from smr.start_op(t)
+                x = yield from smr.read(t, 0, P)
+                if x:
+                    for _ in range(reader_delay_ops):
+                        yield from t.work(100)
+                    out["val"] = yield from t.load(x + KEY)
+                yield from smr.end_op(t)
+            except Neutralized:
+                continue                   # NBR restarted us: retry cleanly
+            break
+
+    def reclaimer(t):
+        smr.thread_init(t)
+        yield from smr.start_op(t)
+        yield from t.work(300)
+        ok = yield from t.cas(P, X, 0)
+        assert ok
+        yield from smr.retire(t, X)
+        yield from smr.end_op(t)
+        yield from smr.flush(t)
+
+    eng.spawn(0, reader)
+    eng.spawn(1, reclaimer)
+    eng.run()
+    return out
+
+
+@pytest.mark.parametrize("scheme", SAFE_SCHEMES)
+def test_all_registry_schemes_survive_litmus_on_vec(scheme):
+    out = _litmus("vec", scheme)
+    # a neutralized NBR reader legitimately never performs the access;
+    # anyone who did must have read the live value
+    assert out.get("val", 42) == 42
+
+
+@pytest.mark.parametrize("backend", ["gen", "vec"])
+def test_broken_hp_is_caught_on_both_backends(backend):
+    with pytest.raises(UseAfterFree):
+        _litmus(backend, "HP-broken")
+
+
+def test_vec_models_tso_store_buffering():
+    """A plain store stays invisible to other threads until a fence drains
+    it, while the owner forwards from its own buffer -- the reordering the
+    whole paper is about, preserved under vectorization."""
+    eng = VecEngine(2, costs=Costs(drain_latency=10_000_000, drain_jitter=0))
+    a = eng.alloc_shared(1)
+    t0, t1 = eng.threads
+    eng.drive(0, t0.store(a, 7))
+    assert eng.drive(1, t1.load(a)) == 0   # not yet globally visible
+    assert eng.drive(0, t0.load(a)) == 7   # store-to-load forwarding
+    eng.drive(0, t0.fence())
+    assert eng.drive(1, t1.load(a)) == 7
+
+
+def test_vec_load_many_trips_on_freed_block():
+    eng = VecEngine(1)
+    t = eng.threads[0]
+    addrs = [eng.mem.alloc.alloc(1) for _ in range(4)]
+    for i, a in enumerate(addrs):
+        eng.mem.cells[a] = 10 + i
+    assert eng.drive(0, t.load_many(addrs)) == [10, 11, 12, 13]
+    eng.mem.alloc.free(addrs[2])
+    with pytest.raises(UseAfterFree):
+        eng.drive(0, t.load_many(addrs))
+
+
+def test_vec_numpy_mirrors_are_coherent():
+    """clocks_np / done_np / signal_at_np / cost_table are the backend's
+    observability surface; they must track the scalar truth."""
+    import numpy as np
+
+    costs = Costs.asymmetric(2, remote=(1,), ping_factor=4.0)
+    eng = VecEngine(2, costs=costs, seed=0)
+    a = eng.alloc_shared(2)
+
+    def body(t):
+        for _ in range(50):
+            yield from t.load(a + t.tid)
+            yield from t.store(a + t.tid, t.tid)
+
+    eng.spawn(0, body)
+    eng.spawn(1, body)
+    eng.deliver_signal(eng.threads[0], 1)
+    assert eng.signal_at_np[1] == eng.threads[1].pending_signal_at
+    assert eng.signal_at_np[0] == np.inf
+    eng.run()
+    for t in eng.threads:
+        assert eng.clocks_np[t.tid] == t.clock
+        assert eng.done_np[t.tid] == t.done is True
+    # the cost table is the per-thread matrix the asymmetric model resolves to
+    lat = list(eng.cost_table[:, _cost_field_index("signal_latency")])
+    assert lat == [Costs().signal_latency, 4.0 * Costs().signal_latency]
+
+
+def _cost_field_index(name):
+    from repro.core.sim.vec import _COST_FIELDS
+    return _COST_FIELDS.index(name)
+
+
+def test_vec_memory_grow_keeps_views_coherent():
+    eng = VecEngine(1)
+    t = eng.threads[0]
+    small = eng.alloc_shared(4)
+    eng.mem.cells[small] = 5
+    big = eng.alloc_shared(20_000)         # forces a reallocation + re-cache
+    assert eng.drive(0, t.load(small)) == 5
+    eng.drive(0, t.atomic_store(big + 19_999, 8))
+    assert eng.drive(0, t.load(big + 19_999)) == 8
+
+
+# ---------------------------------------------------------------------------
+# step throughput: the reason the backend exists
+# ---------------------------------------------------------------------------
+
+def _step_rate(backend, n=8, iters=2500, reps=3):
+    """Best-of-N wall rate (sim ops/s) of the paper's fence-free read path
+    (load, local reservation, validating load) at 8 threads."""
+    best = None
+    for _ in range(reps):
+        eng = make_engine(n, backend=backend, seed=0)
+        cell = eng.alloc_shared(n)
+
+        def body(t):
+            a = cell + t.tid
+            for _ in range(iters):
+                v = yield from t.load(a)
+                yield from t.local_op()
+                v2 = yield from t.load(a)
+                assert v == v2
+
+        for tid in range(n):
+            eng.spawn(tid, body)
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return n * iters * 3 / best
+
+
+def test_vec_step_throughput_at_least_5x_gen():
+    # wall-clock ratio on a shared machine is noisy; a transiently loaded
+    # box can depress one side's best-of-N, so allow two remeasurements --
+    # noise only ever LOWERS the observed ratio, never fakes a speedup
+    best = 0.0
+    for _ in range(3):
+        gen = _step_rate("gen")
+        vec = _step_rate("vec")
+        best = max(best, vec / gen)
+        if best >= 5.0:
+            break
+    assert best >= 5.0, f"vec/gen step-throughput ratio {best:.2f}x (< 5x)"
+
+
+# ---------------------------------------------------------------------------
+# serving-runtime integration (SimulatedSMRPolicy on the vec backend)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", SAFE_SCHEMES)
+def test_pool_policy_protocol_on_vec(scheme):
+    from repro.runtime.block_pool import BlockPool
+    from repro.runtime.reclaim import make_policy
+
+    pool = BlockPool(32, n_engines=3, reclaim_threshold=4,
+                     policy=make_policy(scheme, backend="vec", epoch_freq=1))
+    pool.start_step(0)
+    b = pool.allocate(0, 6)
+    pool.reserve(0, b)
+    pool.touch(0, b)                       # vec: one vectorized gather
+    pool.end_step(0)
+    pool.start_step(1)
+    c = pool.allocate(1, 6)
+    pool.reserve(1, c)
+    pool.retire(1, c[:3])
+    pool.touch(1, c)                       # retired-but-reserved: safe
+    pool.end_step(1)
+    pool.retire(0, b)
+    for _ in range(3):                     # drain announces, advance epochs
+        for e in (0, 1):
+            pool.start_step(e)
+            pool.end_step(e)
+    pool.reclaim(2)
+    pool.policy.flush()
+    if scheme != "NR":
+        assert pool.stats.freed > 0
+    assert pool.check_no_leaks()
+
+
+def test_pool_policy_vec_catches_premature_free():
+    """UnsafeEagerPolicy-style bug surfaced through the vec sim: retire a
+    session-reserved block under HP-broken-like misuse and the touch path
+    must raise."""
+    from repro.runtime.block_pool import BlockPool
+    from repro.runtime.reclaim import SimulatedSMRPolicy
+
+    pool = BlockPool(8, n_engines=2, reclaim_threshold=2,
+                     policy=SimulatedSMRPolicy("NR", backend="vec"))
+    pool.start_step(0)
+    b = pool.allocate(0, 2)
+    pool.reserve(0, b)
+    # bypass the policy: free the mirrored sim nodes directly (a buggy
+    # reclaimer) and confirm the vectorized touch tripwire fires
+    pol = pool.policy
+    for blk in b:
+        pol.sim.mem.alloc.free(pol._node_of[blk])
+    with pytest.raises(UseAfterFree):
+        pool.touch(0, b)
