@@ -24,6 +24,20 @@ garbage-bound axis) and **per-engine throughput** (steps/s min/mean across
 engines -- fairness under ping fan-out), plus blocks allocated per request
 for the sharing comparison.
 
+Two extra axes ride on the grid:
+
+* **kv_store** -- every row records its KV storage layer.  The protocol
+  grid moves no KV payload (``kv_store="none"``); the ``kv-compare`` rows
+  run REAL model traffic through the serving engine twice -- ``dense``
+  (private per-request caches) vs ``paged`` (physical pages +
+  Pallas paged-attention, runtime/kv_store.py) -- and report decode
+  throughput, resident KV bytes, and **bytes-copied-per-request** split by
+  prefix-cache hit/miss (the paged path's hits must be ~0: shared pages
+  enter the block table, nothing is copied).
+* **evict_policy** -- the shared-prefix comparison runs the prefix cache
+  under plain LRU and under refcount-aware eviction (skip entries with
+  live readers) so the two policies are directly comparable.
+
 Simulator backend: ``--sim-backend vec`` runs the simulated schemes on the
 batch-stepped numpy backend (core/sim/vec.py) instead of the generator
 discrete-event engine -- ~5-10x the step throughput, which is what lets
@@ -72,7 +86,7 @@ def run_one(scheme: str, n_engines: int, pressure: str = "high",
             workload: str = "private", prefix_cache: bool = False,
             duration: float = 0.5, blocks_per_req: int = 4,
             window: int = 3, seed: int = 0, sim_backend: str = "gen",
-            asym: bool = False) -> dict:
+            asym: bool = False, evict_policy: str = "lru") -> dict:
     """One grid cell: n_engines real reader threads + 1 reclaimer thread."""
     num_blocks = PRESSURE[pressure] * n_engines
     # the native pool policy never touches the simulator; don't stamp its
@@ -94,7 +108,8 @@ def run_one(scheme: str, n_engines: int, pressure: str = "high",
                      pressure_factor=2,
                      policy=make_policy(scheme, backend=sim_backend,
                                         costs=costs))
-    reclaimer = Reclaimer(pool, engine_id=n_engines, interval_s=0.001)
+    reclaimer = Reclaimer(pool, engine_id=n_engines, interval_s=0.001,
+                          evict_policy=evict_policy)
     stop = threading.Event()
     steps = [0] * n_engines
     requests = [0] * n_engines
@@ -121,7 +136,8 @@ def run_one(scheme: str, n_engines: int, pressure: str = "high",
                             pfx = pool.allocate(eid, PREFIX_BLOCKS)
                         except OutOfBlocks:
                             if prefix_cache:
-                                pool.evict_prefixes(eid, 4)
+                                pool.evict_prefixes(eid, 4,
+                                                    policy=evict_policy)
                             pool.reclaim(eid)
                             pool.end_step(eid)
                             continue
@@ -138,7 +154,7 @@ def run_one(scheme: str, n_engines: int, pressure: str = "high",
                     if extra:
                         pool.retire(eid, extra)
                     if prefix_cache:
-                        pool.evict_prefixes(eid, 4)
+                        pool.evict_prefixes(eid, 4, policy=evict_policy)
                     pool.reclaim(eid)
                     pool.end_step(eid)
                     continue
@@ -195,6 +211,9 @@ def run_one(scheme: str, n_engines: int, pressure: str = "high",
         "scheme": scheme, "engines": n_engines, "pressure": pressure,
         "workload": workload, "prefix_cache": prefix_cache,
         "sim_backend": sim_backend, "asym": asym,
+        # the protocol grid moves no KV payload; the kv-compare rows
+        # (run_kv_compare) record "dense"/"paged" here
+        "kv_store": "none", "evict_policy": evict_policy,
         "steps": total, "requests": n_reqs,
         "us_per_step": 1e6 * elapsed / max(total, 1),
         "steps_per_s_per_engine": per_engine,
@@ -210,6 +229,93 @@ def run_one(scheme: str, n_engines: int, pressure: str = "high",
         "reclaimer_passes": reclaimer.passes,
         "uaf": uaf[0], "errors": errors[:3],
     }
+
+
+def run_kv_compare(n_engines: int = 2, requests: int = 8,
+                   max_new: int = 6) -> list:
+    """Paged-vs-dense KV storage under REAL model traffic: same tiny model,
+    same hot page-aligned prompts, the serving engine run twice.  Reports
+    decode throughput, resident KV bytes, and bytes-copied-per-request by
+    prefix-cache outcome; asserts the paged path's acceptance criteria
+    (hits install ~0 bytes, zero use-after-free, identical tokens)."""
+    import jax
+
+    from repro.configs.base import ArchConfig, dense_stack
+    from repro.models.model import init_params
+    from repro.serve.engine import ServeEngine
+
+    page, max_seq, max_batch = 4, 32, 4
+    cfg = ArchConfig(name="kv-bench", d_model=32, n_heads=4, n_kv_heads=2,
+                     d_ff=64, vocab=64, groups=dense_stack(2), remat="none",
+                     dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    # two hot prompts, both page-aligned so a cache hit covers the WHOLE
+    # prompt (the bytes-per-hit ~ 0 criterion is exact, not approximate)
+    hot = [[1, 9, 3, 5, 2, 8, 6, 4], [7, 2, 8, 6, 4, 1, 3, 5]]
+    rows, outs = [], {}
+    for mode in ("dense", "paged"):
+        eng = ServeEngine(cfg, params, max_batch=max_batch, page_size=page,
+                          num_pages=64, max_seq=max_seq,
+                          n_engines=n_engines, prefix_cache=True,
+                          kv_store=mode)
+        eng.start()
+        # warmup outside the clock: the first request pays jit compile /
+        # kernel tracing, which would otherwise dominate a short run and
+        # make tok_per_s a startup benchmark (a prompt OUTSIDE the hot set,
+        # so the timed hit/miss mix is unchanged)
+        eng.submit([9, 9, 9, 9], max_new=1).done.wait(timeout=600)
+        t0 = time.perf_counter()
+        reqs = [eng.submit(hot[i % len(hot)], max_new=max_new)
+                for i in range(requests)]
+        for r in reqs:
+            r.done.wait(timeout=600)
+        elapsed = time.perf_counter() - t0
+        eng.stop()
+        # the row is printed (uaf included) before the asserts below, so a
+        # failing run still leaves its numbers on stdout (the results file
+        # is only written by a run that completes)
+        uaf = int(isinstance(eng.error, UseAfterFree))
+        outs[mode] = sorted(tuple(r.out) for r in reqs)
+        kv = eng.kv_copy_stats()
+        toks = sum(len(r.out) for r in reqs)
+        if mode == "paged":
+            kv_resident = eng.kv_store.nbytes          # constant pool
+        else:
+            # dense reserves one full cache per concurrently running
+            # request: the static-batch capacity the paged pool replaces
+            per_req = next((w._dense_cache_bytes for w in eng.workers
+                            if w._dense_cache_bytes), 0)
+            kv_resident = per_req * max_batch * n_engines
+        s = eng.pool.stats
+        rows.append({
+            "scheme": "EpochPOP-pool", "engines": n_engines,
+            "pressure": "low", "workload": "kv-compare",
+            "prefix_cache": True, "sim_backend": None, "asym": False,
+            "kv_store": mode, "evict_policy": "lru",
+            "requests": requests, "tokens": toks,
+            "tok_per_s": toks / elapsed,
+            "us_per_step": 1e6 * elapsed / max(eng.steps, 1),
+            "kv_resident_bytes": kv_resident,
+            "bytes_per_hit": kv["bytes_per_hit"],
+            "bytes_per_miss": kv["bytes_per_miss"],
+            "admitted_hit": kv["admitted_hit"],
+            "admitted_miss": kv["admitted_miss"],
+            "prefix_hits": s.prefix_hits, "blocks_saved": s.blocks_saved,
+            "peak_unreclaimed": s.retired_peak, "freed": s.freed,
+            "allocated": s.allocated, "uaf": uaf, "errors": [],
+        })
+        print(f"# kv-compare {mode:5s} e={n_engines} "
+              f"{rows[-1]['tok_per_s']:8.1f} tok/s "
+              f"resident={kv_resident:>9d}B "
+              f"bytes/hit={kv['bytes_per_hit']:8.0f} "
+              f"bytes/miss={kv['bytes_per_miss']:8.0f} uaf={uaf}")
+        assert eng.error is None, f"kv-compare {mode} failed: {eng.error!r}"
+    assert outs["paged"] == outs["dense"], \
+        "paged and dense decode disagree on tokens"
+    paged = rows[-1]
+    assert paged["bytes_per_hit"] == 0, \
+        f"paged cache hit copied {paged['bytes_per_hit']} bytes (want 0)"
+    return rows
 
 
 def run_grid(schemes=DEFAULT_SCHEMES, engines=(1, 2, 4),
@@ -248,15 +354,24 @@ def run_grid(schemes=DEFAULT_SCHEMES, engines=(1, 2, 4),
             cached = run_one(scheme, n, "low", workload="shared-prefix",
                              prefix_cache=True, duration=duration,
                              sim_backend=sim_backend)
-            rows += [base, cached]
+            # same cell under refcount-aware eviction: entries with live
+            # readers survive the reclaimer's pressure sweeps
+            cached_rc = run_one(scheme, n, "low", workload="shared-prefix",
+                                prefix_cache=True, duration=duration,
+                                sim_backend=sim_backend,
+                                evict_policy="refcount-aware")
+            rows += [base, cached, cached_rc]
             print(f"# {scheme:14s} e={n} shared-prefix alloc/req "
                   f"{base['alloc_per_req']:.2f} -> {cached['alloc_per_req']:.2f} "
-                  f"(hits={cached['prefix_hits']}, "
-                  f"saved={cached['blocks_saved']} blocks) "
-                  f"uaf={base['uaf']}+{cached['uaf']}")
-            assert base["uaf"] == 0 and cached["uaf"] == 0, \
+                  f"(lru) / {cached_rc['alloc_per_req']:.2f} (refcount-aware; "
+                  f"evictions {cached['prefix_evictions']} -> "
+                  f"{cached_rc['prefix_evictions']}) "
+                  f"hits={cached['prefix_hits']} "
+                  f"uaf={base['uaf']}+{cached['uaf']}+{cached_rc['uaf']}")
+            assert (base["uaf"] == 0 and cached["uaf"] == 0
+                    and cached_rc["uaf"] == 0), \
                 f"use-after-free under {scheme} (shared): " \
-                f"{base['errors']} {cached['errors']}"
+                f"{base['errors']} {cached['errors']} {cached_rc['errors']}"
             assert cached["alloc_per_req"] < base["alloc_per_req"], \
                 f"prefix cache did not reduce allocations under {scheme}: " \
                 f"{cached['alloc_per_req']:.2f} vs {base['alloc_per_req']:.2f}"
@@ -281,9 +396,21 @@ def run_grid(schemes=DEFAULT_SCHEMES, engines=(1, 2, 4),
 def to_csv(rows) -> list:
     out = []
     for r in rows:
+        if r["workload"] == "kv-compare":
+            tag = f"serve_reclaim:kv:{r['kv_store']}:e{r['engines']}"
+            out.append(
+                f"{tag},{r['us_per_step']:.2f},"
+                f"tok_per_s={r['tok_per_s']:.1f};"
+                f"kv_resident_bytes={r['kv_resident_bytes']};"
+                f"bytes_per_hit={r['bytes_per_hit']:.0f};"
+                f"bytes_per_miss={r['bytes_per_miss']:.0f};"
+                f"uaf={r['uaf']}")
+            continue
         tag = f"serve_reclaim:{r['scheme']}:e{r['engines']}:{r['pressure']}"
         if r["workload"] == "shared-prefix":
             tag += ":shared" + ("+cache" if r["prefix_cache"] else "")
+            if r.get("evict_policy", "lru") != "lru":
+                tag += ":rc"
         if r.get("asym"):
             tag += ":asym"
         if r.get("sim_backend") not in (None, "gen"):
@@ -307,6 +434,10 @@ def main():
                     help="simulator backend for the simulated schemes; "
                          "'vec' extends the default engines axis to 8")
     ap.add_argument("--duration", type=float, default=None)
+    ap.add_argument("--skip-kv", action="store_true",
+                    help="skip the paged-vs-dense model-traffic comparison "
+                         "(it runs real decode through the Pallas kernel in "
+                         "interpret mode, the slowest cells of the grid)")
     ap.add_argument("--out", default="results/serve_reclaim.json")
     args = ap.parse_args()
     engines = (args.engines,) if args.engines else None
@@ -315,12 +446,17 @@ def main():
                         pressures=("high",),
                         duration=args.duration or 0.2,
                         sim_backend=args.sim_backend, asym=False)
+        if not args.skip_kv:
+            rows += run_kv_compare(n_engines=min(engines or (2,)),
+                                   requests=4, max_new=4)
     else:
         # the vec backend is what makes the 8-engine column affordable
         full = (1, 2, 4, 8) if args.sim_backend == "vec" else (1, 2, 4)
         rows = run_grid(engines=engines or full,
                         duration=args.duration or 0.5,
                         sim_backend=args.sim_backend)
+        if not args.skip_kv:
+            rows += run_kv_compare(n_engines=2)
     # regenerate (not append): the file is the CURRENT grid, superseded
     # rows from earlier runs are dropped wholesale
     Path(args.out).parent.mkdir(parents=True, exist_ok=True)

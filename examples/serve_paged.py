@@ -6,9 +6,16 @@ feature).
     PYTHONPATH=src python examples/serve_paged.py                      # EpochPOP pool
     PYTHONPATH=src python examples/serve_paged.py --engines 2          # sharded runtime
     PYTHONPATH=src python examples/serve_paged.py --engines 2 --prefix-cache
+    PYTHONPATH=src python examples/serve_paged.py --kv-store paged     # physical pages
+    PYTHONPATH=src python examples/serve_paged.py --kv-store paged --prefix-cache
     PYTHONPATH=src python examples/serve_paged.py --smr HazardPtrPOP   # any registry scheme
     PYTHONPATH=src python examples/serve_paged.py --smr EBR
     PYTHONPATH=src python examples/serve_paged.py --smr EpochPOP --sim-backend vec
+
+``--kv-store paged`` stores K/V physically in the POP-managed block pool
+(runtime/kv_store.py) and decodes through the Pallas paged-attention kernel
+(interpret mode on CPU, compiled on TPU); a prefix-cache hit then installs
+NO copies -- the shared pages enter the request's block table directly.
 """
 
 import argparse
@@ -39,6 +46,10 @@ def main():
                     help="simulator backend for --smr schemes: 'gen' "
                          "(discrete-event reference) or 'vec' (batch-stepped "
                          "numpy arrays, ~5-10x faster)")
+    ap.add_argument("--kv-store", default="dense", choices=("dense", "paged"),
+                    help="KV storage: 'dense' (one private cache per "
+                         "request) or 'paged' (physical pages in the "
+                         "SMR-managed pool, Pallas paged-attention decode)")
     ap.add_argument("--requests", type=int, default=10)
     args = ap.parse_args()
 
@@ -51,7 +62,8 @@ def main():
                      policy=make_policy(args.smr, backend=args.sim_backend))
     eng = ServeEngine(cfg, params, max_batch=4, page_size=8, max_seq=64,
                       pool=pool, n_engines=args.engines,
-                      prefix_cache=args.prefix_cache)
+                      prefix_cache=args.prefix_cache,
+                      kv_store=args.kv_store)
     eng.start()
     t0 = time.time()
     # a hot shared prefix (page-aligned when --prefix-cache) + a unique tail
@@ -76,6 +88,13 @@ def main():
               f"blocks_saved={s.blocks_saved} evictions={s.prefix_evictions} "
               f"prefill_tokens_skipped="
               f"{sum(w.prefill_tokens_skipped for w in eng.workers)}")
+    kv = eng.kv_copy_stats()
+    print(f"kv_store={kv['kv_store']}: "
+          f"bytes-copied/request hit={kv['bytes_per_hit']:.0f} "
+          f"miss={kv['bytes_per_miss']:.0f}"
+          + (f" | physical pool={eng.kv_store.nbytes} B (constant), "
+             f"pages poisoned={eng.kv_store.poisons}"
+             if eng.kv_store is not None else ""))
     if eng.error is not None:
         raise SystemExit(f"ENGINE FAILED: {type(eng.error).__name__}: {eng.error}")
     print("use-after-free: none (hard error if one had occurred)")

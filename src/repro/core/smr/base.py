@@ -85,6 +85,25 @@ class SMRScheme:
     # not per block), HP pays ONE store-load fence per batch instead of one
     # per block.  The default is the per-read loop, correct for every scheme.
 
+    @staticmethod
+    def _load_many(t: ThreadCtx, addrs: List[int]) -> Generator:
+        """Batched load helper: one vectorized gather (with the vectorized
+        use-after-free sweep) on backends that expose ``load_many`` (the vec
+        engine), a plain per-address loop elsewhere.  Cost and stats
+        accounting are identical either way (n loads, n * load-cost), so the
+        gen/vec equivalence suite holds; only the Python-level overhead
+        changes -- a reclaimer slot scan over N*H reservations becomes ONE
+        numpy gather instead of N*H inline loads."""
+        load_many = getattr(t, "load_many", None)
+        if load_many is not None:
+            vals = yield from load_many(addrs)
+            return vals
+        vals = []
+        for a in addrs:
+            v = yield from t.load(a)
+            vals.append(v)
+        return vals
+
     def reserve_many(self, t: ThreadCtx, ptr_addrs: List[int], decode=None) -> Generator:
         """Protect *ptr_addrs[i] in reservation slot i; returns loaded ptrs."""
         ptrs = []

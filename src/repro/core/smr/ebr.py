@@ -62,12 +62,9 @@ class EBR(SMRScheme):
             yield from self._reclaim(t)
 
     def _min_reserved(self, t: ThreadCtx) -> Generator:
-        m = MAX_ERA
-        for tid in range(self.n):
-            v = yield from t.load(self.reserved + tid)
-            if v < m:
-                m = v
-        return m
+        vals = yield from self._load_many(
+            t, [self.reserved + tid for tid in range(self.n)])
+        return min(vals, default=MAX_ERA)
 
     def _reclaim(self, t: ThreadCtx) -> Generator:
         self.reclaim_calls += 1
@@ -136,12 +133,12 @@ class IBR(EBR):
     def _reclaim(self, t: ThreadCtx) -> Generator:
         self.reclaim_calls += 1
         t.stats.reclaim_events += 1
-        ivals: List[Tuple[int, int]] = []
-        for tid in range(self.n):
-            l = yield from t.load(self.lo + tid)
-            h = yield from t.load(self.hi + tid)
-            if l <= h:
-                ivals.append((l, h))
+        los = yield from self._load_many(
+            t, [self.lo + tid for tid in range(self.n)])
+        his = yield from self._load_many(
+            t, [self.hi + tid for tid in range(self.n)])
+        ivals: List[Tuple[int, int]] = [(l, h) for l, h in zip(los, his)
+                                        if l <= h]
         keep: List[int] = []
         for addr in t.local["retire"]:
             b = self.birth.get(addr, 0)

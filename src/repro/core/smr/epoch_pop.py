@@ -101,11 +101,9 @@ class EpochPOP(SMRScheme):
         self.reclaim_calls += 1
         self.epoch_reclaims += 1
         t.stats.reclaim_events += 1
-        m = MAX_ERA
-        for tid in range(self.n):
-            v = yield from t.load(self.reserved_epoch + tid)
-            if v < m:
-                m = v
+        vals = yield from self._load_many(
+            t, [self.reserved_epoch + tid for tid in range(self.n)])
+        m = min(vals, default=MAX_ERA)
         keep: List[int] = []
         for addr in t.local["retire"]:
             if self.retire_era.get(addr, MAX_ERA) < m:

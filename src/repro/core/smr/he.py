@@ -64,14 +64,30 @@ class HazardEras(SMRScheme):
             yield from t.faa(self.epoch, 1)
             yield from self._reclaim(t)
 
+    def reserve_many(self, t: ThreadCtx, ptr_addrs, decode=None) -> Generator:
+        """Batched era reserve: one gather for the batch (on vec), then --
+        only when the global era moved -- one publish + ONE fence for the
+        whole batch instead of a fence per slot."""
+        mirror = t.local["he_mirror"]
+        n = len(ptr_addrs)
+        while True:
+            ptrs = yield from self._load_many(t, ptr_addrs)
+            new_era = yield from t.load(self.epoch)
+            t.stats.reads += n
+            if all(mirror[i] == new_era for i in range(n)):
+                return ptrs
+            for i in range(n):
+                if mirror[i] != new_era:
+                    yield from t.store(self._slot(t.tid, i), new_era)
+                    mirror[i] = new_era
+            yield from t.fence()
+            # loop: revalidate the batch under the now-published era
+
     def _collect(self, t: ThreadCtx) -> Generator:
-        eras: List[int] = []
-        for tid in range(self.n):
-            for s in range(self.max_hp):
-                v = yield from t.load(self._slot(tid, s))
-                if v != NONE_ERA:
-                    eras.append(v)
-        return eras
+        slots = [self._slot(tid, s) for tid in range(self.n)
+                 for s in range(self.max_hp)]
+        vals = yield from self._load_many(t, slots)
+        return [v for v in vals if v != NONE_ERA]
 
     def _reclaim(self, t: ThreadCtx) -> Generator:
         self.reclaim_calls += 1

@@ -48,24 +48,19 @@ class HazardPointers(SMRScheme):
 
     def reserve_many(self, t: ThreadCtx, ptr_addrs, decode=None) -> Generator:
         """Batched session reserve: publish all slots, then ONE store-load
-        fence for the whole batch (vs one per read on the hot path)."""
+        fence for the whole batch (vs one per read on the hot path).  Both
+        the reserve pass and the validation pass go through the backend's
+        batched load (one gather on vec)."""
         while True:
-            ptrs = []
-            for i, a in enumerate(ptr_addrs):
-                p = yield from t.load(a)
-                ptrs.append(p)
+            ptrs = yield from self._load_many(t, ptr_addrs)
+            for i, p in enumerate(ptrs):
                 node = decode(p) if decode else p
                 yield from t.store(self._slot(t.tid, i), node)
             if self.fence_on_read:
                 yield from t.fence()
-            ok = True
-            for i, a in enumerate(ptr_addrs):
-                again = yield from t.load(a)
-                t.stats.reads += 1
-                if again != ptrs[i]:
-                    ok = False
-                    break
-            if ok:
+            again = yield from self._load_many(t, ptr_addrs)
+            t.stats.reads += len(ptr_addrs)
+            if again == ptrs:
                 return ptrs
 
     def retire(self, t: ThreadCtx, addr: int) -> Generator:
@@ -82,12 +77,11 @@ class HazardPointers(SMRScheme):
         self.reclaim_calls += 1
         t.stats.reclaim_events += 1
         yield from self._pre_scan(t)
-        reserved = set()
-        for tid in range(self.n):
-            for s in range(self.max_hp):
-                v = yield from t.load(self._slot(tid, s))
-                if v != NULL:
-                    reserved.add(v)
+        # the n*max_hp slot scan is ONE gather on the vec backend
+        slots = [self._slot(tid, s) for tid in range(self.n)
+                 for s in range(self.max_hp)]
+        vals = yield from self._load_many(t, slots)
+        reserved = {v for v in vals if v != NULL}
         keep: List[int] = []
         for addr in t.local["retire"]:
             if addr in reserved:

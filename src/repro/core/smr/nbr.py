@@ -78,11 +78,8 @@ class NBR(SMRScheme):
         """Batched session reserve: bare loads, then publish the whole batch
         with enter_write's single fence.  The session runs outside the
         restartable region, so pings during it only acknowledge."""
-        ptrs = []
-        for a in ptr_addrs:
-            p = yield from t.load(a)
-            t.stats.reads += 1
-            ptrs.append(p)
+        ptrs = yield from self._load_many(t, ptr_addrs)
+        t.stats.reads += len(ptr_addrs)
         nodes = [decode(p) if decode else p for p in ptrs]
         yield from self.enter_write(t, nodes)
         return ptrs
@@ -113,9 +110,8 @@ class NBR(SMRScheme):
             yield from self._reclaim(t)
 
     def _collect_acks(self, t: ThreadCtx) -> Generator:
-        snap = [0] * self.n
-        for tid in range(self.n):
-            snap[tid] = yield from t.load(self.ack + tid)
+        snap = yield from self._load_many(
+            t, [self.ack + tid for tid in range(self.n)])
         return snap
 
     _ping_all = HazardPtrPOP._ping_all
@@ -138,12 +134,10 @@ class NBR(SMRScheme):
         snap = yield from self._collect_acks(t)
         yield from self._ping_all(t)
         yield from self._wait_acks(t, snap)
-        reserved = set()
-        for tid in range(self.n):
-            for s in range(self.max_hp):
-                v = yield from t.load(self._slot(tid, s))
-                if v != NULL:
-                    reserved.add(v)
+        slots = [self._slot(tid, s) for tid in range(self.n)
+                 for s in range(self.max_hp)]
+        vals = yield from self._load_many(t, slots)
+        reserved = {v for v in vals if v != NULL}
         keep: List[int] = []
         for addr in t.local["retire"]:
             if addr in reserved:

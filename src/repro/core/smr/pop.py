@@ -60,23 +60,18 @@ class HazardPtrPOP(SMRScheme):
         """Batched session reserve: all reservations stay thread-local --
         one cheap local op covers the batch; publication happens only if a
         reclaimer pings (the paper's traversal-retention argument applied at
-        serving granularity)."""
+        serving granularity).  Loads go through the backend's batched path:
+        on the vec engine the reserve pass and the validation pass are one
+        numpy gather each instead of N inline loads."""
         while True:
             lres = t.local["lres"]
-            ptrs = []
-            for i, a in enumerate(ptr_addrs):
-                p = yield from t.load(a)
-                ptrs.append(p)
+            ptrs = yield from self._load_many(t, ptr_addrs)
+            for i, p in enumerate(ptrs):
                 lres[i] = decode(p) if decode else p
             yield from t.local_op()              # NO fence, NO shared store
-            ok = True
-            for i, a in enumerate(ptr_addrs):
-                again = yield from t.load(a)
-                t.stats.reads += 1
-                if again != ptrs[i]:
-                    ok = False
-                    break
-            if ok:
+            again = yield from self._load_many(t, ptr_addrs)
+            t.stats.reads += len(ptr_addrs)
+            if again == ptrs:
                 return ptrs
 
     # ---- signal handler: Algorithm 2, publishReservations ----
@@ -99,9 +94,8 @@ class HazardPtrPOP(SMRScheme):
             yield from self._pop_reclaim(t)
 
     def _collect_counters(self, t: ThreadCtx) -> Generator:
-        snap = [0] * self.n
-        for tid in range(self.n):
-            snap[tid] = yield from t.load(self.pub_counter + tid)
+        snap = yield from self._load_many(
+            t, [self.pub_counter + tid for tid in range(self.n)])
         return snap
 
     def _ping_all(self, t: ThreadCtx) -> Generator:
@@ -125,13 +119,11 @@ class HazardPtrPOP(SMRScheme):
 
     def _collect_reservations(self, t: ThreadCtx) -> Generator:
         reserved = set(t.local["lres"])              # own are known locally
-        for tid in range(self.n):
-            if tid == t.tid:
-                continue
-            for s in range(self.max_hp):
-                v = yield from t.load(self._slot(tid, s))
-                if v != NULL:
-                    reserved.add(v)
+        # (n-1)*max_hp published slots: one gather on the vec backend
+        slots = [self._slot(tid, s) for tid in range(self.n) if tid != t.tid
+                 for s in range(self.max_hp)]
+        vals = yield from self._load_many(t, slots)
+        reserved.update(v for v in vals if v != NULL)
         return reserved
 
     def _pop_reclaim(self, t: ThreadCtx) -> Generator:
@@ -223,6 +215,22 @@ class HazardEraPOP(SMRScheme):
     _ping_all = HazardPtrPOP._ping_all
     _wait_all_published = HazardPtrPOP._wait_all_published
 
+    def reserve_many(self, t: ThreadCtx, ptr_addrs, decode=None) -> Generator:
+        """Batched era reserve: load the batch (one gather on vec), check
+        the global era; all reservations stay thread-local, published only
+        on ping -- one local op per batch, no fence."""
+        lres = t.local["lres"]
+        n = len(ptr_addrs)
+        while True:
+            ptrs = yield from self._load_many(t, ptr_addrs)
+            new_era = yield from t.load(self.epoch)
+            t.stats.reads += n
+            if all(lres[i] == new_era for i in range(n)):
+                return ptrs
+            for i in range(n):
+                lres[i] = new_era
+            yield from t.local_op()              # no fence needed (POP)
+
     def _pop_reclaim(self, t: ThreadCtx) -> Generator:
         self.reclaim_calls += 1
         t.stats.reclaim_events += 1
@@ -230,13 +238,10 @@ class HazardEraPOP(SMRScheme):
         yield from self._ping_all(t)
         yield from self._wait_all_published(t, snap)
         eras = [e for e in t.local["lres"] if e != NONE_ERA]
-        for tid in range(self.n):
-            if tid == t.tid:
-                continue
-            for s in range(self.max_hp):
-                v = yield from t.load(self._slot(tid, s))
-                if v != NONE_ERA:
-                    eras.append(v)
+        slots = [self._slot(tid, s) for tid in range(self.n) if tid != t.tid
+                 for s in range(self.max_hp)]
+        vals = yield from self._load_many(t, slots)
+        eras.extend(v for v in vals if v != NONE_ERA)
         keep: List[int] = []
         for addr in t.local["retire"]:
             b = self.birth.get(addr, 0)

@@ -10,20 +10,66 @@ the memory pipeline (double-buffered page fetches), not as a materialized
 grid = (B, Hkv, n_pages); pages are the sequential axis with the online
 softmax state (m, l, acc) in VMEM scratch.  Dead table entries (-1) are
 masked and their DMA redirected to page 0.
+
+Ragged decode batches: a serving step batches requests whose block lists
+have wildly different lengths (fresh single-page requests next to
+max-pages ones, and rows that hold zero tokens).  :func:`build_block_table`
+packs such ragged lists into the kernel's padded ``(B, max_pages)`` layout
+-- table width is the BATCH max, not the engine max, so short batches do
+not pay dead grid iterations -- and the kernel itself guarantees a
+fully-dead row (length 0, all entries -1) produces exact zeros instead of
+NaN garbage, so empty requests ride through the batched call unharmed.
 """
 
 from __future__ import annotations
 
 import functools
 import math
-from typing import Optional
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+
+def build_block_table(
+    blocks: Sequence[Sequence[int]],
+    lengths: Sequence[int],
+    *,
+    page: int,
+    min_pages: int = 1,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pack per-request block lists into a padded ``(B, max_pages)`` table.
+
+    ``blocks[b]`` is request b's physical page list (block-pool ids, prefix-
+    shared pages first); ``lengths[b]`` the number of tokens it currently
+    holds.  Only the pages that cover ``lengths[b]`` tokens enter the row --
+    trailing pre-allocated-but-unwritten pages are dead entries (-1), so a
+    premature gather of an unwritten page can never look valid.  Width is
+    max(ceil(len/page)) over the batch, floored at ``min_pages`` so the
+    kernel grid never gets a zero-sized axis (an all-empty batch still
+    produces a well-formed (B, min_pages) table of -1s).
+    """
+    rows: List[List[int]] = []
+    for i, (bl, ln) in enumerate(zip(blocks, lengths)):
+        used = -(-int(ln) // page)          # pages holding actual tokens
+        if len(bl) < used:
+            # silent truncation would mask positions the caller claims
+            # exist -- wrong attention with no error; fail loudly instead
+            raise ValueError(
+                f"request {i}: {int(ln)} tokens need {used} pages, "
+                f"block list has {len(bl)}")
+        rows.append(list(bl[:used]))
+    width = max([min_pages] + [len(r) for r in rows])
+    table = np.full((len(rows), width), -1, np.int32)
+    for i, r in enumerate(rows):
+        table[i, :len(r)] = r
+    return (jnp.asarray(table),
+            jnp.asarray(np.asarray(lengths, np.int32)))
 
 
 def _paged_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
@@ -51,7 +97,12 @@ def _paged_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
     m_prev, l_prev = m_scr[...], l_scr[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)
+    # explicit dead-position zeroing: when a row has NO valid position at all
+    # (empty request in a ragged batch), m_new stays at NEG_INF and
+    # exp(s - m_new) would be exp(0) = 1 for every dead slot -- the masked
+    # weights must be forced to zero so the row accumulates nothing and the
+    # final normalization (l == 0) yields exact zeros, not a mean over junk
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
     corr = jnp.exp(m_prev - m_new)
     m_scr[...] = m_new
     l_scr[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)

@@ -115,9 +115,22 @@ class BlockPool:
         self._engine_shared: List[Dict[int, int]] = [dict()
                                                      for _ in range(n_engines)]
 
+        # block listeners: objects with on_alloc(blocks)/on_free(blocks),
+        # called when a block id leaves the free list and when the policy
+        # actually returns it.  The paged KV store registers here so its
+        # physical pages are poisoned exactly when the SMR decision frees
+        # the id -- under ANY policy, including the deliberately broken one
+        # (every policy funnels frees through _return_blocks_if).
+        self._listeners: List[Any] = []
+
         self.stats = PoolStats()
         self.policy = policy or EpochPOPPolicy()
         self.policy.attach(self)
+
+    def add_block_listener(self, listener: Any) -> None:
+        """Register for on_alloc/on_free block lifecycle callbacks (e.g. a
+        :class:`~repro.runtime.kv_store.PagedKVStore`)."""
+        self._listeners.append(listener)
 
     # ------------------------------------------------------------------
     # engine (reader) API
@@ -146,6 +159,8 @@ class BlockPool:
             self.stats.allocated += n
             self.stats.free_watermark_min = min(self.stats.free_watermark_min,
                                                 len(self._free))
+        for lis in self._listeners:
+            lis.on_alloc(blocks)
         self._live_local[engine].update(blocks)
         self.policy.on_allocate(engine, blocks)
         return blocks
@@ -287,16 +302,47 @@ class BlockPool:
             self.retire(engine, dead)
         return len(dead)
 
+    def _entries_with_live_readers(self) -> Set[Hashable]:
+        """Keys of cache entries at least one of whose blocks is currently
+        referenced by an active request (refcount above what the cache
+        entries themselves hold).  Caller holds ``_lock``."""
+        holders: Dict[int, int] = {}
+        for blocks, _ in self._prefix_cache.values():
+            for b in blocks:
+                holders[b] = holders.get(b, 0) + 1
+        live: Set[Hashable] = set()
+        for key, (blocks, _) in self._prefix_cache.items():
+            if any(self._shared_ref.get(b, 0) > holders.get(b, 0)
+                   for b in blocks):
+                live.add(key)
+        return live
+
     def evict_prefixes(self, engine: int,
-                       max_entries: Optional[int] = None) -> int:
-        """Drop up to ``max_entries`` LRU cache entries (all when None).
+                       max_entries: Optional[int] = None, *,
+                       policy: str = "lru") -> int:
+        """Drop up to ``max_entries`` cache entries (all when None).
         Blocks whose last reference was the evicted entry go to the retired
         list -- recycled only once the SMR policy proves no reader session
         or live set still spans them.  Returns the number of entries
-        evicted."""
+        evicted.
+
+        ``policy``:
+          * ``"lru"`` (default) -- oldest entries first, regardless of use;
+            an entry evicted under active readers stays safe (the readers'
+            request refs keep its blocks alive, then SMR guards recycling)
+            but the next request for that prefix re-prefills it.
+          * ``"refcount-aware"`` -- LRU over entries with NO live request
+            references; hot entries survive the sweep, so eviction sheds
+            only capacity that will not immediately be refaulted.
+        """
+        if policy not in ("lru", "refcount-aware"):
+            raise ValueError(f"unknown eviction policy {policy!r}")
         dead: List[int] = []
         with self._lock:
             keys = list(self._prefix_cache)
+            if policy == "refcount-aware":
+                live = self._entries_with_live_readers()
+                keys = [k for k in keys if k not in live]
             if max_entries is not None:
                 keys = keys[:max_entries]
             for key in keys:
@@ -360,12 +406,23 @@ class BlockPool:
 
     def _return_blocks_if(self, pred: Callable[[int, int], bool]) -> int:
         """Policy callback: free every retired (block, epoch) with
-        ``pred(block, epoch)`` true.  Returns the number freed."""
+        ``pred(block, epoch)`` true.  Returns the number freed.
+
+        This is the single choke point every policy's free decision flows
+        through, so it is where block listeners learn a physical page died
+        (the paged KV store poisons it here).  Listeners fire BEFORE the
+        ids re-enter the free list: a block must be poisoned while it is
+        still unallocatable, otherwise a racing allocate could un-poison
+        and write it only to have the late poison corrupt the new life."""
         with self._lock:
             keep, free_now = [], []
             for b, e in self._retired:
                 (free_now if pred(b, e) else keep).append((b, e))
             self._retired = keep
+            if free_now:
+                freed_ids = [b for b, _ in free_now]
+                for lis in self._listeners:
+                    lis.on_free(freed_ids)
             for b, _ in free_now:
                 self._free.append(b)
                 self._freeset.add(b)

@@ -1,0 +1,237 @@
+"""Device-paged KV store: the physical half of the POP-managed block pool.
+
+:class:`~repro.runtime.block_pool.BlockPool` owns block *identity* --
+allocation, ownership, reader sessions, and (through the pluggable
+:class:`~repro.runtime.reclaim.ReclaimPolicy`) the decision of when a
+retired block may be recycled.  :class:`PagedKVStore` owns the block
+*contents*: one physical K page and one V page per (layer, block id), laid
+out exactly as ``kernels/paged_attention.py`` consumes them --
+``(num_blocks, page, Hkv, hd)`` per layer -- so a decode step gathers
+shared prefix pages physically through the block table instead of
+replaying a per-request dense cache.
+
+Lifecycle of a physical page (mirrors the paper's retire/ping/free cycle;
+see docs/ARCHITECTURE.md):
+
+    allocate ── pool hands the block id to an engine; the store clears the
+                poison mark (``on_alloc`` listener) so the fresh owner may
+                write
+    write    ── prefill (``write_prefill``) or per-token decode append
+                (``append_token``) fill slots; shared-prefix pages are
+                written ONCE by whichever engine prefilled them
+    share    ── the block id enters the pool's prefix cache; readers gather
+                the same physical page through their block tables, no copy
+    retire   ── last reference drops; the block sits on the retired list
+                while the SMR policy proves no reader session spans it
+    poison   ── the policy frees the block (``on_free`` listener): the store
+                marks the id and overwrites the page with a huge finite
+                sentinel (``POISON``; deliberately not NaN -- see
+                :meth:`PagedKVStore.on_free`), so any freed-then-read
+                gather trips a hard
+                :class:`~repro.core.sim.engine.UseAfterFree` -- the same
+                deterministic tripwire the simulated backends give the
+                schemes
+    recycle  ── the pool re-allocates the id; ``on_alloc`` un-poisons and
+                the new owner's writes take the page over
+
+The store is the host-side model of device HBM: numpy arrays written in
+place (token appends are single-slot scatters, never whole-cache copies),
+handed to the Pallas kernel as jnp arrays per decode step.  The *write*
+path is O(token); the current *read* path re-materializes the page arrays
+for the kernel each step, which is fine at host scale but is the thing to
+fix for real device residency -- keeping the pages as device arrays
+updated via per-slot scatters would make the layout and block-table
+contract here carry over unchanged (ROADMAP: device-resident page
+arrays).  On CPU the kernel runs in interpret mode; on TPU it compiles.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.sim.engine import UseAfterFree
+
+__all__ = ["PagedKVStore", "kv_layer_order"]
+
+
+def kv_layer_order(cfg) -> List[Tuple[int, int, int]]:
+    """Global layer enumeration ``[(group, pattern_pos, repeat), ...]`` in
+    execution order -- the single source of truth both the prefill cache
+    extraction and the paged decode loop index physical layers by."""
+    order: List[Tuple[int, int, int]] = []
+    for gi, g in enumerate(cfg.groups):
+        for rep in range(g.repeats):
+            for pi in range(len(g.pattern)):
+                order.append((gi, pi, rep))
+    return order
+
+
+class PagedKVStore:
+    """Physical page arrays for K and V, keyed by BlockPool block ids.
+
+    Thread-safe for the serving runtime's access pattern: every block is
+    written by exactly one engine (its owner) while it is live, and the
+    poison/unpoison transitions are serialized by the pool's free-list lock
+    (the listeners fire inside pool operations).  A small internal lock
+    guards the poison set itself so ``assert_alive`` can be called from any
+    reader without racing a concurrent free.
+    """
+
+    #: freed-page fill value (finite on purpose; see :meth:`on_free`)
+    POISON = 1e9
+
+    def __init__(self, cfg, num_blocks: int, page_size: int, dtype=None):
+        self.cfg = cfg
+        self.num_blocks = num_blocks
+        self.page = page_size
+        self.layer_order = kv_layer_order(cfg)
+        L = len(self.layer_order)
+        Hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+        # pages live in the MODEL dtype (ml_dtypes makes bfloat16 a numpy
+        # dtype once jax is imported), so the paged path stores exactly the
+        # values the dense cache would -- the paged/dense parity contract
+        # holds for bf16 configs, not just f32, and resident-bytes
+        # comparisons are apples to apples
+        dtype = np.dtype(cfg.dtype if dtype is None else dtype)
+        self.k = np.zeros((L, num_blocks, page_size, Hkv, hd), dtype)
+        self.v = np.zeros_like(self.k)
+        self._lock = threading.Lock()
+        self._poisoned: set = set()
+        # observability: the benchmark's bytes-copied axis reads these
+        self.bytes_written = 0          # KV bytes physically written
+        self.poisons = 0                # pages poisoned (freed under the store)
+        self.token_bytes = int(2 * L * Hkv * hd * self.k.itemsize)
+
+    # ------------------------------------------------------------------
+    # pool listener hooks (wired via BlockPool.add_block_listener)
+    # ------------------------------------------------------------------
+
+    def on_alloc(self, blocks: Sequence[int]) -> None:
+        """A block id left the free list: its previous life is over, the new
+        owner may write.  Clearing the mark here (not at write time) keeps
+        ``assert_alive`` honest for tail pages that are allocated to a
+        request but not yet written; zeroing the page keeps not-yet-written
+        slots inert under the kernel's masking (0 * masked-weight = 0,
+        whereas leftover poison would still be gathered by the DMA)."""
+        with self._lock:
+            self._poisoned.difference_update(blocks)
+            for b in blocks:
+                self.k[:, b] = 0.0
+                self.v[:, b] = 0.0
+
+    def on_free(self, blocks: Sequence[int]) -> None:
+        """The reclaim policy proved the block safe to recycle -- or, under
+        :class:`~repro.runtime.reclaim.UnsafeEagerPolicy`, decided to free
+        it out from under live readers.  Either way the physical page is
+        dead: poison it so a stale gather is a hard error -- and, should a
+        checker be bypassed, the page contents themselves are overwritten
+        with a huge finite sentinel (not NaN: dead table entries redirect
+        their DMA to page 0, and a NaN there would leak through the
+        kernel's masked lanes as 0 * NaN) so silently-read junk shows up as
+        blown-out logits instead of plausibly stale K/V."""
+        with self._lock:
+            for b in blocks:
+                self._poisoned.add(b)
+                self.k[:, b] = self.POISON
+                self.v[:, b] = self.POISON
+            self.poisons += len(blocks)
+
+    # ------------------------------------------------------------------
+    # writes (owner-engine only)
+    # ------------------------------------------------------------------
+
+    def write_prefill(self, blocks: Sequence[int], k, v,
+                      start: int = 0) -> int:
+        """Write a prefilled token range into ``blocks``.
+
+        ``k``/``v``: ``(L, T, Hkv, hd)`` -- the per-layer post-rope K/V of T
+        consecutive tokens starting at sequence position ``start`` (the
+        prefill cache leaves, see serve/paged_model.py).  ``blocks`` is the
+        request's page list from position 0, so token ``start + i`` lands in
+        ``blocks[(start + i) // page]`` slot ``(start + i) % page``.
+        Returns the number of bytes written.
+        """
+        k = np.asarray(k)
+        v = np.asarray(v)
+        T = k.shape[1]
+        page = self.page
+        pos = start
+        written = 0
+        t = 0
+        while t < T:
+            blk = blocks[pos // page]
+            slot = pos % page
+            n = min(page - slot, T - t)
+            self.k[:, blk, slot:slot + n] = k[:, t:t + n]
+            self.v[:, blk, slot:slot + n] = v[:, t:t + n]
+            written += 2 * k[:, t:t + n].nbytes
+            pos += n
+            t += n
+        self.bytes_written += written
+        return written
+
+    def append_token(self, block: int, slot: int, k, v,
+                     layer: int = None) -> int:
+        """Write one decoded token's K/V into ``block`` at ``slot`` -- a
+        single-slot scatter, the paged path's whole per-token write cost
+        (the dense path functionally updates an entire ``(L, max_seq, ...)``
+        cache per token).  With ``layer=None`` the arrays are ``(L, Hkv,
+        hd)`` and every layer is written; with a layer index they are
+        ``(Hkv, hd)`` (the decode loop appends layer by layer, right before
+        that layer's gather)."""
+        k = np.asarray(k)
+        if layer is None:
+            self.k[:, block, slot] = k
+            self.v[:, block, slot] = np.asarray(v)
+        else:
+            self.k[layer, block, slot] = k
+            self.v[layer, block, slot] = np.asarray(v)
+        written = 2 * k.nbytes
+        self.bytes_written += written
+        return written
+
+    # ------------------------------------------------------------------
+    # reads (any engine holding a reservation)
+    # ------------------------------------------------------------------
+
+    def assert_alive(self, engine: int, blocks: Sequence[int]) -> None:
+        """The physical-page use-after-free tripwire: raise if any block a
+        reader is about to gather was freed (poisoned) under it.  Mirrors
+        the simulated allocator's FREED-state check, at page granularity."""
+        with self._lock:
+            for b in blocks:
+                if b in self._poisoned:
+                    raise UseAfterFree(engine, b, "kv-gather")
+
+    def gather_table(self, blocks: Sequence[Sequence[int]],
+                     lengths: Sequence[int], *, min_pages: int = 1):
+        """Padded block-table rows for a ragged batch of requests -- the
+        kernel-facing view of the pool's block lists.  Delegates to
+        :func:`repro.kernels.paged_attention.build_block_table` so the
+        layout contract lives in one place."""
+        from repro.kernels.paged_attention import build_block_table
+        return build_block_table(blocks, lengths, page=self.page,
+                                 min_pages=min_pages)
+
+    def layer_pages(self, layer: int):
+        """The (num_blocks, page, Hkv, hd) K and V page arrays of one
+        layer, as the kernel consumes them."""
+        return self.k[layer], self.v[layer]
+
+    @property
+    def poisoned_blocks(self) -> int:
+        with self._lock:
+            return len(self._poisoned)
+
+    def is_poisoned(self, block: int) -> bool:
+        with self._lock:
+            return block in self._poisoned
+
+    @property
+    def nbytes(self) -> int:
+        """Total physical pool footprint (constant -- the paged path's peak
+        KV memory regardless of request count)."""
+        return self.k.nbytes + self.v.nbytes

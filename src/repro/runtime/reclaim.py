@@ -29,6 +29,16 @@ Every policy sees the same seam:
     on_reserve / on_clear_session   -- batched reader sessions (reserve-many)
     touch(engine, blocks)           -- scheme-level use-after-free tripwire
     reclaim(engine) -> freed        -- explicit scan (OutOfBlocks pressure)
+
+Physical consequences of a free: every policy's decision funnels through
+``BlockPool._return_blocks_if``, which notifies the pool's block listeners
+-- in paged-KV serving that is the :class:`~repro.runtime.kv_store.
+PagedKVStore`, which poisons the freed block's K/V pages so a
+freed-then-gathered page raises :class:`UseAfterFree` even outside the
+simulator.  A policy that frees too early (``UnsafeEagerPolicy``, or a
+buggy scheme) therefore trips hard at BOTH layers: the pool's
+generation/free-set check in ``touch`` and the store's page-poison check
+in ``assert_alive``.
 """
 
 from __future__ import annotations

@@ -26,39 +26,28 @@ from __future__ import annotations
 from typing import List, Optional, Sequence
 
 import jax
-import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models.model import apply_model
 from repro.runtime.block_pool import BlockPool
+from repro.runtime.kv_store import PagedKVStore
 from repro.serve.scheduler import Scheduler
 from repro.serve.worker import EngineWorker, Reclaimer, Request
 
-__all__ = ["PagedKVCache", "Request", "ServeEngine"]
-
-
-class PagedKVCache:
-    """Physical page pool (numpy at host scale) + per-request block tables.
-
-    Layout matches kernels/paged_attention.py: pages (P, page, Hkv, hd) per
-    layer; the block table is rebuilt per step from request block lists.
-    """
-
-    def __init__(self, cfg: ArchConfig, num_pages: int, page_size: int):
-        self.cfg = cfg
-        self.page = page_size
-        layers = cfg.n_layers
-        Hkv, hd = cfg.n_kv_heads, cfg.head_dim_
-        self.k = np.zeros((layers, num_pages, page_size, Hkv, hd), np.float32)
-        self.v = np.zeros_like(self.k)
-
-    def write_token(self, layer: int, block: int, slot: int, k, v):
-        self.k[layer, block, slot] = k
-        self.v[layer, block, slot] = v
+__all__ = ["PagedKVStore", "Request", "ServeEngine"]
 
 
 class ServeEngine:
-    """Facade: Scheduler + N EngineWorkers + Reclaimer over one BlockPool."""
+    """Facade: Scheduler + N EngineWorkers + Reclaimer over one BlockPool.
+
+    ``kv_store`` selects the KV storage layer: ``"dense"`` keeps one private
+    jax cache per request (the historical path, any architecture);
+    ``"paged"`` stores K/V physically in a shared
+    :class:`~repro.runtime.kv_store.PagedKVStore` keyed by the pool's block
+    ids and decodes through the Pallas paged-attention kernel (GQA configs;
+    see serve/paged_model.py).  Both paths run under every SMR policy, so
+    they A/B cleanly in the benchmarks.
+    """
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
                  page_size: int = 16, num_pages: int = 256,
@@ -66,9 +55,19 @@ class ServeEngine:
                  smr: Optional[str] = None, n_engines: int = 1,
                  prefix_cache: bool = False,
                  reclaim_interval_s: float = 0.002,
-                 sim_backend: str = "gen", sim_costs=None):
+                 sim_backend: str = "gen", sim_costs=None,
+                 kv_store: str = "dense", kernel_impl: Optional[str] = None,
+                 evict_policy: str = "lru"):
         self.cfg = cfg
         self.params = params
+        if kv_store not in ("dense", "paged"):
+            raise ValueError(f"kv_store must be 'dense' or 'paged', "
+                             f"got {kv_store!r}")
+        if evict_policy not in ("lru", "refcount-aware"):
+            # fail at construction, not asynchronously in a worker or the
+            # reclaimer thread mid-run
+            raise ValueError(f"evict_policy must be 'lru' or "
+                             f"'refcount-aware', got {evict_policy!r}")
         if pool is None:
             from repro.runtime.reclaim import make_policy
             # one engine slot per worker + one for the dedicated reclaimer;
@@ -91,6 +90,15 @@ class ServeEngine:
                 f"pool has {pool.n_engines} engine slots, need {n_engines}")
         self.pool = pool
         self.n_engines = n_engines
+        # paged KV mode: ONE physical page store shared by every worker,
+        # registered as a pool block listener so frees poison pages and
+        # (re)allocations clear them -- under whichever SMR policy decides
+        self.kv_store: Optional[PagedKVStore] = None
+        if kv_store == "paged":
+            from repro.serve.paged_model import check_paged_support
+            check_paged_support(cfg)
+            self.kv_store = PagedKVStore(cfg, pool.num_blocks, page_size)
+            pool.add_block_listener(self.kv_store)
         # one jitted decode shared by every worker (JAX execution is
         # thread-safe; the compile cache is shared)
         self._decode = jax.jit(
@@ -98,14 +106,17 @@ class ServeEngine:
         self.workers: List[EngineWorker] = [
             EngineWorker(i, cfg, params, pool, self._decode,
                          max_batch=max_batch, page_size=page_size,
-                         max_seq=max_seq, prefix_cache=prefix_cache)
+                         max_seq=max_seq, prefix_cache=prefix_cache,
+                         kv_store=self.kv_store, kernel_impl=kernel_impl,
+                         evict_policy=evict_policy)
             for i in range(n_engines)]
         # dedicated reclaimer only if the pool has a spare engine slot;
         # otherwise workers reclaim on pressure (pre-split behavior)
         self.reclaimer: Optional[Reclaimer] = None
         if pool.n_engines > n_engines:
             self.reclaimer = Reclaimer(pool, engine_id=n_engines,
-                                       interval_s=reclaim_interval_s)
+                                       interval_s=reclaim_interval_s,
+                                       evict_policy=evict_policy)
         self.scheduler = Scheduler(self.workers, self.reclaimer)
 
     # -- client API (unchanged from the monolithic engine) --
@@ -126,3 +137,21 @@ class ServeEngine:
     @property
     def error(self) -> Optional[BaseException]:
         return self.scheduler.error
+
+    def kv_copy_stats(self) -> dict:
+        """Aggregate bytes-copied-per-request accounting across workers:
+        how many KV bytes admission installed into per-request storage,
+        split by prefix-cache outcome.  The paged path's headline number is
+        ``bytes_per_hit`` ~ 0 (shared pages enter the block table, nothing
+        is copied); the dense path pays a full cache per request."""
+        hit_b = sum(w.kv_bytes_copied_hit for w in self.workers)
+        miss_b = sum(w.kv_bytes_copied_miss for w in self.workers)
+        hits = sum(w.admitted_hit for w in self.workers)
+        misses = sum(w.admitted_miss for w in self.workers)
+        return {
+            "kv_store": "paged" if self.kv_store is not None else "dense",
+            "admitted_hit": hits, "admitted_miss": misses,
+            "bytes_hit": hit_b, "bytes_miss": miss_b,
+            "bytes_per_hit": hit_b / max(hits, 1),
+            "bytes_per_miss": miss_b / max(misses, 1),
+        }

@@ -1,0 +1,203 @@
+"""Paged decode forward: the model math of a decode step driven through the
+physically paged KV store and the Pallas paged-attention kernel.
+
+The dense serving path runs :func:`repro.models.model.apply_model` in decode
+mode against a per-request ``(L, max_seq, Hkv, hd)`` cache -- every token
+functionally updates the whole cache and prefix "sharing" is a snapshot
+copy.  This module is the paged twin: attention reads K/V straight out of
+the :class:`~repro.runtime.kv_store.PagedKVStore`'s physical pages through a
+per-request block table (``kernels/paged_attention.py``), and the only
+per-token write is a single page-slot scatter.
+
+Scope: the paged path supports the GQA transformer family the serving demo
+and tests exercise -- every layer ``mixer="attn"`` with ``attn_kind="full"``
+and a dense MLP (qk_norm / post_norms / softcaps / partial rotary all
+honored).  MLA, sliding-window, SSM/RWKV mixers, MoE, cross-attention and
+weight-tied shared attention keep using the dense path;
+:func:`check_paged_support` rejects them up front so the failure mode is a
+clear error at engine construction, not silent wrong math.
+
+The per-layer loop runs at host level (a numpy page write sits between the
+projection math and the kernel call), so this is NOT one jitted function;
+the projection/MLP pieces are small jnp ops and the kernel runs compiled on
+TPU or in interpret mode on CPU.  That is the right trade at host scale:
+the kernel is the hot loop, and the host writes are O(token), not O(cache).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.layers import apply_rope, rms_norm
+from repro.models.model import apply_model
+from repro.runtime.kv_store import PagedKVStore, kv_layer_order
+
+__all__ = ["check_paged_support", "prefill_kv", "paged_decode_step",
+           "paged_impl"]
+
+
+def check_paged_support(cfg: ArchConfig) -> None:
+    """Raise ValueError unless every layer of ``cfg`` is paged-decodable."""
+    problems: List[str] = []
+    if cfg.encoder_groups:
+        problems.append("encoder_groups (enc-dec)")
+    if cfg.mtp:
+        problems.append("mtp head")
+    for gi, g in enumerate(cfg.groups):
+        for pi, ls in enumerate(g.pattern):
+            where = f"g{gi}/p{pi}"
+            if ls.mixer != "attn":
+                problems.append(f"{where}: mixer={ls.mixer}")
+            elif ls.attn_kind != "full":
+                problems.append(f"{where}: attn_kind={ls.attn_kind}")
+            if ls.mlp != "dense":
+                problems.append(f"{where}: mlp={ls.mlp}")
+            if ls.shared_attn:
+                problems.append(f"{where}: shared_attn")
+            if not ls.causal:
+                problems.append(f"{where}: non-causal")
+    if problems:
+        raise ValueError(
+            "config not supported by the paged KV path (use kv_store="
+            "'dense'): " + "; ".join(problems))
+
+
+def paged_impl() -> str:
+    """Kernel implementation for this host: compiled Pallas on TPU,
+    interpret mode (kernel body executed on CPU) everywhere else."""
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+
+def _layer_params(params, gi: int, pi: int, rep: int):
+    """Slice one physical layer's weights out of the stacked group params."""
+    gp = params["groups"][f"g{gi}"][f"p{pi}"]
+    return jax.tree.map(lambda a: a[rep], gp)
+
+
+# ----------------------------------------------------------------------------
+# prefill: dense full-sequence forward, K/V extracted for the page writes
+# ----------------------------------------------------------------------------
+
+
+def prefill_kv(params, cfg: ArchConfig,
+               tokens: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+    """Prefill a prompt with the standard full-sequence forward and return
+    its per-layer post-rope K/V as ``(L, S, Hkv, hd)`` numpy arrays, in
+    :func:`~repro.runtime.kv_store.kv_layer_order` order -- ready for
+    :meth:`PagedKVStore.write_prefill`.
+
+    Prefill stays dense on purpose (one batched matmul pass beats S
+    single-token steps); only the *storage* of its result is paged.
+    """
+    toks = jnp.asarray([list(tokens)], jnp.int32)
+    _, cache, _ = apply_model(params, toks, cfg=cfg, mode="prefill")
+    ks, vs = [], []
+    for gi, pi, rep in kv_layer_order(cfg):
+        lc = cache["groups"][f"g{gi}"][f"p{pi}"]
+        # keep the cache's own dtype: the page arrays store exactly the
+        # values the dense path would (bit-for-bit for bf16 and f32 alike)
+        ks.append(np.asarray(lc["k"][rep, 0]))               # (S, Hkv, hd)
+        vs.append(np.asarray(lc["v"][rep, 0]))
+    return np.stack(ks), np.stack(vs)
+
+
+# ----------------------------------------------------------------------------
+# decode: batched step over block tables
+# ----------------------------------------------------------------------------
+
+
+def paged_decode_step(
+    params,
+    cfg: ArchConfig,
+    store: PagedKVStore,
+    blocks: Sequence[Sequence[int]],     # per-request page lists (shared first)
+    lens: Sequence[int],                 # tokens already stored per request
+    last_tokens: Sequence[int],          # token fed this step, per request
+    *,
+    impl: str = "interpret",
+) -> jnp.ndarray:
+    """One batched decode step for a ragged batch of requests.
+
+    For each request the fed token's K/V is appended at page slot
+    ``lens[b]`` (a single scatter into the shared physical pool), then every
+    layer's attention gathers through the padded block table -- prefix-
+    shared pages are read in place, whichever engine wrote them.  Returns
+    the ``(B, vocab_padded)`` logits of the new position.
+    """
+    from repro.kernels import ops as kops
+
+    B = len(blocks)
+    page = store.page
+    dt = jnp.dtype(cfg.dtype)
+    lens_np = np.asarray(lens, np.int64)
+    table, _ = store.gather_table(blocks, [n + 1 for n in lens_np])
+    att_lens = jnp.asarray(lens_np + 1, jnp.int32)
+    positions = jnp.asarray(lens_np, jnp.int32)[:, None]     # (B,1)
+
+    toks = jnp.asarray(list(last_tokens), jnp.int32)[:, None]  # (B,1)
+    x = jnp.take(params["embed"], toks, axis=0).astype(dt)     # (B,1,D)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    scale = (1.0 / math.sqrt(cfg.attn_scale) if cfg.attn_scale
+             else 1.0 / math.sqrt(hd))
+
+    for li, (gi, pi, rep) in enumerate(store.layer_order):
+        lp = _layer_params(params, gi, pi, rep)
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        ap = lp["attn"]
+        q = jnp.einsum("bsd,dhe->bshe", h, ap["wq"])
+        k = jnp.einsum("bsd,dhe->bshe", h, ap["wk"])
+        v = jnp.einsum("bsd,dhe->bshe", h, ap["wv"])
+        if cfg.qk_norm:
+            q = rms_norm(q, ap["q_scale"], cfg.norm_eps)
+            k = rms_norm(k, ap["k_scale"], cfg.norm_eps)
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_pct)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_pct)
+
+        # physical append: token b lands in its page BEFORE the gather, so
+        # the new position attends to itself exactly like the dense path
+        # (model dtype preserved end to end)
+        k_np = np.asarray(k[:, 0])                           # (B, Hkv, hd)
+        v_np = np.asarray(v[:, 0])
+        for b in range(B):
+            pos = int(lens_np[b])
+            store.append_token(blocks[b][pos // page], pos % page,
+                               k_np[b], v_np[b], layer=li)
+
+        k_pages, v_pages = store.layer_pages(li)
+        out = kops.paged_attention(
+            q[:, 0].astype(jnp.float32),                     # (B, H, hd)
+            jnp.asarray(k_pages), jnp.asarray(v_pages),
+            table, att_lens,
+            softcap=cfg.attn_softcap, scale=scale, impl=impl)
+        out = out.reshape(B, 1, H, hd).astype(dt)
+        o = jnp.einsum("bshe,hed->bsd", out, ap["wo"])
+        if cfg.post_norms:
+            o = rms_norm(o, lp["post_norm1"], cfg.norm_eps)
+        x = x + o
+
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        o = L.mlp_apply(lp["mlp"], h, cfg.act)
+        if cfg.post_norms:
+            o = rms_norm(o, lp["post_norm2"], cfg.norm_eps)
+        x = x + o
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(dt))
+    logits = L.softcap(logits, cfg.logit_softcap)
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits[:, 0]

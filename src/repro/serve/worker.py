@@ -13,11 +13,25 @@ engine had.
 Prefix sharing: when enabled, a worker admitting a request first asks the
 pool's content-keyed prefix cache for the longest page-aligned prompt prefix
 already prefilled by any worker.  A hit reuses the shared blocks (refcounted
-by the pool) AND the prefilled KV snapshot (immutable jax arrays, safe to
-share), so the worker skips both the allocation and the prefill compute for
-those tokens.  On finish, shared blocks are *released*, not retired; the
-pool retires them only when the last holder (cache entry included) lets go,
-and the SMR policy decides when recycling is actually safe.
+by the pool) AND the prefilled KV state, so the worker skips both the
+allocation and the prefill compute for those tokens.  On finish, shared
+blocks are *released*, not retired; the pool retires them only when the
+last holder (cache entry included) lets go, and the SMR policy decides when
+recycling is actually safe.
+
+KV storage is selectable per engine (``kv_store``):
+
+* **dense** -- the historical host-scale path: one private ``(L, max_seq,
+  Hkv, hd)`` jax cache per request, decode through ``apply_model``; a
+  prefix hit installs the cached KV *snapshot* (a whole-cache payload).
+* **paged** -- the physically paged path: K/V live ONLY in the shared
+  :class:`~repro.runtime.kv_store.PagedKVStore` pages keyed by the pool's
+  block ids, and a decode step batches every running request into one
+  ``(table, lens, q)`` call of the Pallas paged-attention kernel
+  (serve/paged_model.py).  A prefix hit installs *no copies at all*: the
+  shared physical pages enter the request's block table directly, and the
+  prefix-cache payload shrinks from a KV snapshot to just the prefilled
+  length (the block ids already live in the cache entry).
 """
 
 from __future__ import annotations
@@ -28,10 +42,13 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.model import init_cache
 from repro.runtime.block_pool import BlockPool, OutOfBlocks
+from repro.runtime.kv_store import PagedKVStore
 
 
 @dataclass
@@ -55,7 +72,10 @@ class EngineWorker:
 
     def __init__(self, engine_id: int, cfg, params, pool: BlockPool, decode,
                  *, max_batch: int = 8, page_size: int = 16,
-                 max_seq: int = 256, prefix_cache: bool = False):
+                 max_seq: int = 256, prefix_cache: bool = False,
+                 kv_store: Optional[PagedKVStore] = None,
+                 kernel_impl: Optional[str] = None,
+                 evict_policy: str = "lru"):
         self.engine_id = engine_id
         self.cfg = cfg
         self.params = params
@@ -64,7 +84,15 @@ class EngineWorker:
         self.page = page_size
         self.max_seq = max_seq
         self.prefix_cache = prefix_cache
+        self.evict_policy = evict_policy
         self._decode = decode
+        # paged KV mode: physical pages + Pallas kernel instead of dense
+        # per-request caches (None = dense, the historical path)
+        self.kv_store = kv_store
+        if kv_store is not None and kernel_impl is None:
+            from repro.serve.paged_model import paged_impl
+            kernel_impl = paged_impl()
+        self.kernel_impl = kernel_impl
         self.queue: "queue.Queue[Request]" = queue.Queue()
         self.running: Dict[int, Request] = {}
         self._caches: Dict[int, dict] = {}
@@ -72,6 +100,15 @@ class EngineWorker:
         self.steps = 0
         self.prefill_tokens = 0
         self.prefill_tokens_skipped = 0
+        # bytes of KV installed into per-request private storage at
+        # admission, split by prefix-cache outcome (the benchmark's
+        # bytes-copied-per-request axis); dense counts the request's whole
+        # materialized cache, paged counts only freshly written pages
+        self.kv_bytes_copied_hit = 0
+        self.kv_bytes_copied_miss = 0
+        self.admitted_hit = 0
+        self.admitted_miss = 0
+        self._dense_cache_bytes: Optional[int] = None
         self.error: Optional[BaseException] = None
         self._thread: Optional[threading.Thread] = None
 
@@ -114,14 +151,21 @@ class EngineWorker:
     def _lookup_prefix(self, r: Request):
         """Longest cached page-aligned prefix of r.prompt; returns
         (shared_blocks, cache_snapshot, prefilled_len).  One logical lookup
-        = one hit or one miss in the stats, however many lengths it probes."""
+        = one hit or one miss in the stats, however many lengths it probes.
+
+        Payload shape differs by KV mode: dense entries carry a whole KV
+        snapshot ``(cache, plen)``; paged entries carry only ``plen`` -- the
+        physical pages ARE the KV, already named by the entry's block ids."""
         n_full = len(r.prompt) // self.page
         for k in range(n_full, 0, -1):
             hit = self.pool.acquire_prefix(
                 self.engine_id, self._prefix_key(r.prompt[:k * self.page]),
                 count_miss=False)
             if hit is not None:
-                blocks, (cache, plen) = hit
+                blocks, payload = hit
+                if self.kv_store is not None:
+                    return blocks, None, payload
+                cache, plen = payload
                 return blocks, cache, plen
         if n_full:
             self.pool.count_prefix_miss()
@@ -129,9 +173,12 @@ class EngineWorker:
 
     def _allocate(self, n_blocks: int) -> List[int]:
         """Allocate with pressure fallbacks: reclaim, then (when the prefix
-        cache is on) evict LRU prefixes -- a small batch first, so hot
-        entries survive a transient spike; everything only as a last
-        resort -- and reclaim again."""
+        cache is on) evict prefixes under the configured policy -- a small
+        batch first, so hot entries survive a transient spike -- and
+        reclaim again.  The last resort is an unconditional LRU sweep of
+        everything: refcount-aware eviction may legitimately find nothing
+        evictable (every entry has live readers), and shedding hot cache
+        capacity beats failing the allocation outright."""
         eid = self.engine_id
         try:
             return self.pool.allocate(eid, n_blocks)
@@ -142,8 +189,8 @@ class EngineWorker:
         except OutOfBlocks:
             if not self.prefix_cache:
                 raise
-        for batch in (4, None):
-            self.pool.evict_prefixes(eid, batch)
+        for batch, policy in ((4, self.evict_policy), (None, "lru")):
+            self.pool.evict_prefixes(eid, batch, policy=policy)
             self.pool.reclaim(eid)
             try:
                 return self.pool.allocate(eid, n_blocks)
@@ -158,6 +205,12 @@ class EngineWorker:
                 r = self.queue.get_nowait()
             except queue.Empty:
                 return
+            if not r.prompt:
+                # empty request: nothing to decode from; finish immediately
+                # (the kernel-level empty-row case is exercised directly in
+                # the block-table raggedness tests)
+                r.done.set()
+                continue
             shared: List[int] = []
             cache, plen = None, 0
             if self.prefix_cache:
@@ -172,40 +225,107 @@ class EngineWorker:
                 self.queue.put(r)   # retry later
                 return
             r.shared_blocks = shared
-            if cache is None:
-                # per-request dense cache at host scale (the paged Pallas
-                # kernel takes over on device; block accounting is identical)
-                cache = init_cache(self.cfg, 1, self.max_seq, self.cfg.dtype)
             self.prefill_tokens_skipped += plen
-            # prefill the uncached remainder token-by-token, snapshotting the
-            # cache at the last full-page boundary so the prefix is reusable
             n_full = len(r.prompt) // self.page
-            boundary = n_full * self.page
-            snap = cache if plen == boundary else None
-            toks = jnp.asarray([r.prompt], jnp.int32)
-            for t in range(plen, len(r.prompt)):
-                # per-token safepoint: prefill length must not stretch the
-                # bounded ping-delivery window a whole prompt long
-                self.pool.safepoint(self.engine_id)
-                _, cache, _ = self._decode(self.params, cache, toks[:, t:t + 1])
-                self.prefill_tokens += 1
-                if t + 1 == boundary:
-                    snap = cache
-            self._caches[r.rid] = cache
+            if self.kv_store is not None:
+                self._admit_paged(r, plen, n_full)
+            else:
+                self._admit_dense(r, cache, plen, n_full)
             self.running[r.rid] = r
-            if self.prefix_cache and n_full and plen < boundary:
-                self._insert_prefix(r, n_full, snap)
+            if plen:
+                self.admitted_hit += 1
+            else:
+                self.admitted_miss += 1
 
-    def _insert_prefix(self, r: Request, n_full: int, snap) -> None:
+    def _admit_dense(self, r: Request, cache, plen: int, n_full: int) -> None:
+        """Dense admission: private jax cache, token-by-token prefill of the
+        uncached remainder, KV *snapshot* published at the page boundary."""
+        if cache is None:
+            cache = init_cache(self.cfg, 1, self.max_seq, self.cfg.dtype)
+        if self._dense_cache_bytes is None:
+            self._dense_cache_bytes = sum(
+                int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+                for leaf in jax.tree.leaves(cache))
+        # the request's KV is a full private cache either way: a hit merely
+        # seeds it from the snapshot (which the first decode write copies)
+        if plen:
+            self.kv_bytes_copied_hit += self._dense_cache_bytes
+        else:
+            self.kv_bytes_copied_miss += self._dense_cache_bytes
+        # prefill the uncached remainder token-by-token, snapshotting the
+        # cache at the last full-page boundary so the prefix is reusable
+        boundary = n_full * self.page
+        snap = cache if plen == boundary else None
+        toks = jnp.asarray([r.prompt], jnp.int32)
+        for t in range(plen, len(r.prompt)):
+            # per-token safepoint: prefill length must not stretch the
+            # bounded ping-delivery window a whole prompt long
+            self.pool.safepoint(self.engine_id)
+            _, cache, _ = self._decode(self.params, cache, toks[:, t:t + 1])
+            self.prefill_tokens += 1
+            if t + 1 == boundary:
+                snap = cache
+        self._caches[r.rid] = cache
+        if self.prefix_cache and n_full and plen < boundary:
+            self._insert_prefix(r, n_full, payload=(snap, boundary))
+
+    def _admit_paged(self, r: Request, plen: int, n_full: int) -> None:
+        """Paged admission: K/V go straight into the shared physical pages.
+
+        A full-prefix hit installs NOTHING -- the shared pages enter the
+        request's block table as-is.  A miss prefills the whole prompt with
+        one dense forward and writes the result into the request's pages; a
+        partial hit replays only the remainder, token by token, through the
+        paged kernel itself (each replayed token physically attends to the
+        shared prefix pages)."""
+        from repro.serve.paged_model import paged_decode_step, prefill_kv
+
+        store = self.kv_store
+        # count installed bytes from the writes THIS admission performs
+        # (store.bytes_written is pool-global and races with other workers'
+        # concurrent decode appends)
+        written = 0
+        if plen == 0:
+            # one batched forward prefills the whole prompt, so the ping-
+            # delivery window here is ONE prompt forward (bounded by
+            # max_seq) rather than the dense path's one token.  A missed
+            # ping only makes EpochPOP conservative for that pass (it
+            # times out and frees nothing beyond epochs); chunked prefill
+            # (ROADMAP) will restore per-page safepoint cadence.
+            self.pool.safepoint(self.engine_id)
+            k, v = prefill_kv(self.params, self.cfg, r.prompt)
+            self.pool.safepoint(self.engine_id)
+            written += store.write_prefill(r.all_blocks, k, v, start=0)
+            self.prefill_tokens += len(r.prompt)
+        else:
+            for t in range(plen, len(r.prompt)):
+                self.pool.safepoint(self.engine_id)
+                paged_decode_step(self.params, self.cfg, store,
+                                  [r.all_blocks], [t], [r.prompt[t]],
+                                  impl=self.kernel_impl)
+                self.prefill_tokens += 1
+                written += store.token_bytes
+        if plen:
+            self.kv_bytes_copied_hit += written
+        else:
+            self.kv_bytes_copied_miss += written
+        boundary = n_full * self.page
+        if self.prefix_cache and n_full and plen < boundary:
+            # the pages already hold the prefix physically; the payload is
+            # just its token length -- no KV snapshot to copy around
+            self._insert_prefix(r, n_full, payload=boundary)
+
+    def _insert_prefix(self, r: Request, n_full: int, payload) -> None:
         """Publish the full page-aligned prompt prefix: blocks 0..n_full-1
         of the request (cached-shared first, then private) plus the KV
-        snapshot at the page boundary."""
+        payload (dense: ``(snapshot, plen)``; paged: ``plen`` -- the pages
+        themselves are the KV)."""
         k = len(r.shared_blocks)
         converts = r.blocks[:n_full - k]
         prefix_blocks = r.shared_blocks + converts
         key = self._prefix_key(r.prompt[:n_full * self.page])
         if self.pool.share_prefix(self.engine_id, key, prefix_blocks,
-                                  payload=(snap, n_full * self.page)):
+                                  payload=payload):
             # converted blocks are now shared: release (not retire) on finish
             r.blocks = r.blocks[n_full - k:]
             r.shared_blocks = prefix_blocks
@@ -221,6 +341,22 @@ class EngineWorker:
         # publish on ping instead of a fence per block)
         session = [b for r in self.running.values() for b in r.all_blocks]
         self.pool.reserve(self.engine_id, session)
+        if self.kv_store is not None:
+            finished = self._step_paged()
+        else:
+            finished = self._step_dense()
+        for rid in finished:
+            r = self.running.pop(rid)
+            self._caches.pop(rid, None)
+            self.pool.retire(self.engine_id, r.blocks)      # -> SMR
+            if r.shared_blocks:
+                self.pool.release_shared(self.engine_id, r.shared_blocks)
+            r.blocks, r.shared_blocks = [], []
+            r.done.set()
+        self.steps += 1
+
+    def _step_dense(self) -> List[int]:
+        """Per-request decode against private dense caches."""
         finished = []
         for rid, r in list(self.running.items()):
             self.pool.touch(self.engine_id, r.all_blocks)   # UAF tripwire
@@ -233,15 +369,31 @@ class EngineWorker:
             self._caches[rid] = cache
             if len(r.out) >= r.max_new:
                 finished.append(rid)
-        for rid in finished:
-            r = self.running.pop(rid)
-            del self._caches[rid]
-            self.pool.retire(self.engine_id, r.blocks)      # -> SMR
-            if r.shared_blocks:
-                self.pool.release_shared(self.engine_id, r.shared_blocks)
-            r.blocks, r.shared_blocks = [], []
-            r.done.set()
-        self.steps += 1
+        return finished
+
+    def _step_paged(self) -> List[int]:
+        """ONE batched (table, lens, q) decode through the paged kernel:
+        every running request becomes a block-table row over the shared
+        physical pages -- ragged lengths, prefix pages included in place."""
+        from repro.serve.paged_model import paged_decode_step
+
+        rs = list(self.running.values())
+        gather = [b for r in rs for b in r.all_blocks]
+        self.pool.touch(self.engine_id, gather)             # pool tripwire
+        self.kv_store.assert_alive(self.engine_id, gather)  # page tripwire
+        blocks = [r.all_blocks for r in rs]
+        lens = [len(r.prompt) + len(r.out) for r in rs]
+        last = [r.out[-1] if r.out else r.prompt[-1] for r in rs]
+        logits = paged_decode_step(self.params, self.cfg, self.kv_store,
+                                   blocks, lens, last,
+                                   impl=self.kernel_impl)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        finished = []
+        for r, tok in zip(rs, nxt):
+            r.out.append(int(tok))
+            if len(r.out) >= r.max_new:
+                finished.append(r.rid)
+        return finished
 
     def _loop(self) -> None:
         try:
@@ -269,13 +421,15 @@ class Reclaimer:
 
     def __init__(self, pool: BlockPool, engine_id: int, *,
                  interval_s: float = 0.002,
-                 low_watermark: Optional[int] = None, evict_batch: int = 4):
+                 low_watermark: Optional[int] = None, evict_batch: int = 4,
+                 evict_policy: str = "lru"):
         self.pool = pool
         self.engine_id = engine_id
         self.interval_s = interval_s
         self.low_watermark = (max(2, pool.num_blocks // 8)
                               if low_watermark is None else low_watermark)
         self.evict_batch = evict_batch
+        self.evict_policy = evict_policy
         self.passes = 0
         self.error: Optional[BaseException] = None
         self._stop = threading.Event()
@@ -301,7 +455,8 @@ class Reclaimer:
                 self.pool.safepoint(self.engine_id)
                 if (self.pool.free_blocks <= self.low_watermark
                         and self.pool.prefix_entries):
-                    self.pool.evict_prefixes(self.engine_id, self.evict_batch)
+                    self.pool.evict_prefixes(self.engine_id, self.evict_batch,
+                                             policy=self.evict_policy)
                 self.pool.reclaim(self.engine_id)
                 self.passes += 1
         except BaseException as e:  # noqa: BLE001

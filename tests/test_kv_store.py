@@ -1,0 +1,329 @@
+"""Device-paged KV store: paged-vs-dense decode parity, physical-page
+use-after-free tripwires, and block-table raggedness edge cases.
+
+Parity is the load-bearing contract: the paged path (physical pages +
+Pallas paged-attention kernel in interpret mode) must produce the SAME
+tokens as the dense per-request-cache path, config by config -- otherwise
+"physically shared prefixes" would be a different model, not a different
+storage layer.
+"""
+
+import numpy as np
+import pytest
+
+# skip-if-no-jax, same idiom the property suite uses for hypothesis: the
+# paged path is jax end to end (model forward + Pallas interpret kernel)
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import ArchConfig, dense_stack  # noqa: E402
+from repro.core.sim.engine import UseAfterFree  # noqa: E402
+from repro.kernels.paged_attention import (build_block_table,  # noqa: E402
+                                           paged_attention_pallas)
+from repro.models.model import apply_model, init_cache, init_params  # noqa: E402
+from repro.runtime.block_pool import BlockPool  # noqa: E402
+from repro.runtime.kv_store import PagedKVStore, kv_layer_order  # noqa: E402
+from repro.runtime.reclaim import UnsafeEagerPolicy  # noqa: E402
+from repro.serve.engine import ServeEngine  # noqa: E402
+from repro.serve.paged_model import (check_paged_support,  # noqa: E402
+                                     paged_decode_step, prefill_kv)
+
+RNG = np.random.default_rng(3)
+
+# two distinct architectures: plain GQA, and one exercising qk_norm,
+# post_norms, attention softcap, partial rotary, and tied embeddings
+CFG_PLAIN = ArchConfig(
+    name="kv-plain", d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+    vocab=64, groups=dense_stack(2), remat="none", dtype="float32")
+CFG_FANCY = ArchConfig(
+    name="kv-fancy", d_model=32, n_heads=4, n_kv_heads=4, d_ff=48,
+    vocab=80, groups=dense_stack(3), remat="none", dtype="float32",
+    qk_norm=True, post_norms=True, attn_softcap=30.0, rope_pct=0.5,
+    tie_embeddings=True)
+CONFIGS = [CFG_PLAIN, CFG_FANCY]
+
+PAGE = 4
+
+
+def _engine(cfg, params, mode, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("page_size", PAGE)
+    kw.setdefault("num_pages", 64)
+    kw.setdefault("max_seq", 32)
+    return ServeEngine(cfg, params, kv_store=mode, **kw)
+
+
+def _run(eng, prompts, max_new=4):
+    eng.start()
+    reqs = [eng.submit(p, max_new=max_new) for p in prompts]
+    for r in reqs:
+        assert r.done.wait(timeout=300)
+    eng.stop()
+    assert eng.error is None, f"engine failed: {eng.error!r}"
+    return [list(r.out) for r in reqs]
+
+
+# ----------------------------------------------------------------------------
+# parity: paged and dense decode produce identical tokens
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=lambda c: c.name)
+def test_paged_dense_token_parity(cfg):
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    # varied raggedness: single-token tail page (5 = PAGE+1), page-aligned
+    # (8), minimal (1), and a longer multi-page prompt
+    prompts = [[1, 9, 3, 5, 2], [7, 2, 8, 6, 4, 1, 3, 5], [11],
+               [int(x) for x in RNG.integers(1, cfg.vocab, 11)]]
+    outs = {}
+    for mode in ("dense", "paged"):
+        outs[mode] = _run(_engine(cfg, params, mode), prompts)
+    assert outs["paged"] == outs["dense"]
+
+
+@pytest.mark.parametrize("dtype,atol", [("float32", 2e-4),
+                                        ("bfloat16", 5e-2)])
+def test_paged_decode_logits_match_dense(dtype, atol):
+    """One decode step, same prompt: paged logits vs dense logits.  The
+    bf16 case pins the store to the MODEL dtype (pages must hold exactly
+    the values the dense cache would, not silently-upcast f32)."""
+    cfg = CFG_PLAIN.scaled(dtype=dtype)
+    prompt = [3, 1, 4, 1, 5, 9, 2]
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    n = len(prompt)
+
+    # dense: token-by-token prefill (the worker's path), then one decode
+    cache = init_cache(cfg, 1, 32, cfg.dtype)
+    toks = jnp.asarray([prompt], jnp.int32)
+    for t in range(n):
+        _, cache, _ = apply_model(params, toks[:, t:t + 1], cfg=cfg,
+                                  mode="decode", cache=cache)
+    dense_logits, _, _ = apply_model(
+        params, jnp.asarray([[prompt[-1]]], jnp.int32), cfg=cfg,
+        mode="decode", cache=cache)
+
+    # paged: dense prefill written into pages, then one paged step
+    store = PagedKVStore(cfg, num_blocks=8, page_size=PAGE)
+    assert store.k.dtype == np.dtype(cfg.dtype)
+    blocks = [0, 1, 2]
+    k, v = prefill_kv(params, cfg, prompt)
+    store.write_prefill(blocks, k, v)
+    paged_logits = paged_decode_step(params, cfg, store, [blocks], [n],
+                                     [prompt[-1]], impl="interpret")
+    np.testing.assert_allclose(np.asarray(paged_logits[0], np.float32),
+                               np.asarray(dense_logits[0, -1], np.float32),
+                               atol=atol, rtol=atol)
+
+
+def test_prefill_kv_matches_decode_appends():
+    """The dense-prefill extraction and the per-token decode appends must
+    write the SAME physical pages (post-rope K/V, same layer order)."""
+    cfg, prompt = CFG_FANCY, [2, 7, 1, 8, 2, 8]
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    a = PagedKVStore(cfg, num_blocks=4, page_size=PAGE)
+    b = PagedKVStore(cfg, num_blocks=4, page_size=PAGE)
+    k, v = prefill_kv(params, cfg, prompt)
+    a.write_prefill([0, 1], k, v)
+    for t in range(len(prompt)):
+        paged_decode_step(params, cfg, b, [[0, 1]], [t], [prompt[t]],
+                          impl="interpret")
+    np.testing.assert_allclose(a.k, b.k, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(a.v, b.v, atol=2e-5, rtol=2e-5)
+
+
+# ----------------------------------------------------------------------------
+# prefix sharing installs no copies on the paged path
+# ----------------------------------------------------------------------------
+
+
+def test_paged_prefix_hit_installs_zero_bytes():
+    cfg = CFG_PLAIN
+    params = init_params(cfg, jax.random.PRNGKey(4))
+    prompt = [5, 3, 9, 1, 2, 6, 4, 8]          # exactly 2 pages at PAGE=4
+    eng = _engine(cfg, params, "paged", prefix_cache=True, n_engines=1)
+    eng.start()
+    r1 = eng.submit(prompt, max_new=3)
+    assert r1.done.wait(timeout=300)
+    r2 = eng.submit(prompt, max_new=3)
+    assert r2.done.wait(timeout=300)
+    eng.stop()
+    assert eng.error is None, f"engine failed: {eng.error!r}"
+    assert r1.out == r2.out
+    stats = eng.kv_copy_stats()
+    assert stats["admitted_hit"] >= 1
+    # the hit's pages entered the block table directly: ZERO bytes copied
+    assert stats["bytes_hit"] == 0
+    assert stats["bytes_miss"] > 0
+    assert eng.pool.stats.prefix_hits >= 1
+
+
+# ----------------------------------------------------------------------------
+# physical-page use-after-free tripwires
+# ----------------------------------------------------------------------------
+
+
+def test_poison_on_unsafe_free_trips_gather():
+    """A freed-then-gathered page must be a hard UseAfterFree, exactly like
+    the simulated backends' FREED-state check."""
+    cfg = CFG_PLAIN
+    pool = BlockPool(8, n_engines=2, policy=UnsafeEagerPolicy())
+    store = PagedKVStore(cfg, pool.num_blocks, PAGE)
+    pool.add_block_listener(store)
+    blocks = pool.allocate(0, 2)
+    L = len(kv_layer_order(cfg))
+    store.write_prefill(blocks, np.ones((L, PAGE, 2, 8), np.float32),
+                        np.ones((L, PAGE, 2, 8), np.float32))
+    # engine 1 opens a reader session over the blocks -- the unsafe policy
+    # frees them on retire anyway
+    pool.reserve(1, blocks)
+    store.assert_alive(1, blocks)              # still live: no error
+    pool.retire(0, blocks)                     # unsafe: freed immediately
+    assert all(store.is_poisoned(b) for b in blocks)
+    with pytest.raises(UseAfterFree):
+        store.assert_alive(1, blocks)
+    # the page contents themselves are poisoned too (belt and braces)
+    assert float(np.max(store.k[:, blocks[0]])) >= PagedKVStore.POISON
+
+
+def test_safe_policy_keeps_pages_alive_under_session():
+    """Under the default EpochPOP policy the same sequence must NOT free:
+    the open reader session pins the retired blocks."""
+    cfg = CFG_PLAIN
+    pool = BlockPool(8, n_engines=2, reclaim_threshold=1, pressure_factor=1,
+                     ping_timeout_s=0.2)
+    store = PagedKVStore(cfg, pool.num_blocks, PAGE)
+    pool.add_block_listener(store)
+    pool.start_step(1)
+    blocks = pool.allocate(0, 2)
+    pool.reserve(1, blocks)
+    pool.retire(0, blocks)
+    pool.reclaim(0)
+    store.assert_alive(1, blocks)              # session open: still live
+    assert not any(store.is_poisoned(b) for b in blocks)
+    pool.end_step(1)                           # session closes
+    pool.reclaim(0)
+    assert all(store.is_poisoned(b) for b in blocks)
+    with pytest.raises(UseAfterFree):
+        store.assert_alive(1, blocks)
+
+
+def test_realloc_unpoisons_and_zeroes():
+    cfg = CFG_PLAIN
+    pool = BlockPool(2, n_engines=1, policy=UnsafeEagerPolicy())
+    store = PagedKVStore(cfg, pool.num_blocks, PAGE)
+    pool.add_block_listener(store)
+    blocks = pool.allocate(0, 2)
+    pool.retire(0, blocks)                     # freed + poisoned
+    again = pool.allocate(0, 2)                # recycled ids
+    assert sorted(again) == sorted(blocks)
+    store.assert_alive(0, again)               # new life: no error
+    assert float(np.max(np.abs(store.k))) == 0.0   # pages zeroed
+
+
+# ----------------------------------------------------------------------------
+# block-table raggedness edge cases
+# ----------------------------------------------------------------------------
+
+
+def _rand(shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+def test_block_table_empty_request_row_yields_zeros():
+    """A zero-length row in a ragged batch must come back as exact zeros
+    (not NaN, not a mean over masked junk)."""
+    P, page, H, D = 8, 4, 2, 32
+    q = _rand((2, H, D))
+    kp, vp = _rand((P, page, H, D)), _rand((P, page, H, D))
+    table, lens = build_block_table([[], [3, 5]], [0, 6], page=page)
+    out = paged_attention_pallas(q, kp, vp, table, lens, interpret=True)
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_array_equal(np.asarray(out[0]), 0.0)
+    assert float(np.max(np.abs(np.asarray(out[1])))) > 0.0
+
+
+def test_block_table_all_empty_batch():
+    table, lens = build_block_table([[], []], [0, 0], page=4)
+    assert table.shape == (2, 1)               # min_pages floor
+    assert np.all(np.asarray(table) == -1)
+    q = _rand((2, 2, 32))
+    kp = _rand((4, 4, 2, 32))
+    out = paged_attention_pallas(q, kp, kp, table, lens, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_block_table_trims_unwritten_tail_pages():
+    """Pre-allocated but unwritten tail pages must be dead entries, and the
+    table width is the batch max, not the allocation max."""
+    table, lens = build_block_table([[7, 2, 4], [1]], [5, 1], page=4)
+    assert table.shape == (2, 2)               # ceil(5/4)=2 pages max
+    np.testing.assert_array_equal(np.asarray(table),
+                                  [[7, 2], [1, -1]])
+
+
+def test_single_token_tail_page_and_max_pages_parity():
+    """Ragged batch mixing a single-token tail page with a request filling
+    every table slot: kernel output matches the reference oracle."""
+    from repro.kernels import ref
+    P, page, H, D = 16, 4, 2, 32
+    q = _rand((2, H, D))
+    kp, vp = _rand((P, page, H, D)), _rand((P, page, H, D))
+    blocks = [[3], [8, 9, 10, 11]]
+    lens = [1, 16]                             # tail page of 1; max pages
+    table, lengths = build_block_table(blocks, lens, page=page)
+    got = paged_attention_pallas(q, kp, vp, table, lengths, interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, table, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ----------------------------------------------------------------------------
+# paged serving under the SMR policies (pages recycle through the scheme)
+# ----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("smr", ["EpochPOP-pool", "HazardPtrPOP", "EBR"])
+def test_paged_serving_under_smr_policy(smr):
+    """Real paged serving traffic with prefix sharing under a native and
+    two simulated schemes: zero UseAfterFree, pages poisoned only after
+    the scheme frees, pool leak-free at shutdown."""
+    from repro.runtime.reclaim import make_policy
+
+    cfg = CFG_PLAIN
+    params = init_params(cfg, jax.random.PRNGKey(5))
+    pool = BlockPool(32, n_engines=2, reclaim_threshold=4,
+                     pressure_factor=2, policy=make_policy(smr))
+    eng = ServeEngine(cfg, params, max_batch=4, page_size=PAGE, max_seq=32,
+                      pool=pool, n_engines=1, prefix_cache=True,
+                      kv_store="paged")
+    eng.start()
+    prompt = [5, 3, 9, 1]
+    reqs = [eng.submit(prompt + [i + 1], max_new=3) for i in range(4)]
+    for r in reqs:
+        assert r.done.wait(timeout=300)
+    eng.stop()
+    assert eng.error is None, f"engine failed under {smr}: {eng.error!r}"
+    pool.evict_prefixes(0)
+    pool.policy.flush()
+    assert pool.stats.freed > 0
+    # every freed block's pages got poisoned (retire -> scheme free -> poison)
+    assert eng.kv_store.poisons == pool.stats.freed
+    assert pool.check_no_leaks()
+
+
+# ----------------------------------------------------------------------------
+# config gating
+# ----------------------------------------------------------------------------
+
+
+def test_unsupported_config_rejected_up_front():
+    bad = ArchConfig(name="bad", d_model=32, n_heads=4, n_kv_heads=2,
+                     d_ff=64, vocab=64, remat="none", dtype="float32",
+                     groups=dense_stack(2, attn_kind="local"))
+    with pytest.raises(ValueError, match="attn_kind"):
+        check_paged_support(bad)
+    params = init_params(CFG_PLAIN, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="not supported"):
+        ServeEngine(bad, params, kv_store="paged")
+    with pytest.raises(ValueError, match="kv_store"):
+        ServeEngine(CFG_PLAIN, params, kv_store="blocked")

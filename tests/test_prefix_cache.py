@@ -171,3 +171,49 @@ def test_shared_block_protected_by_session_until_smr_agrees():
     pool.evict_prefixes(0)                    # eager free under open session
     with pytest.raises(UseAfterFree):
         pool.touch(1, blocks)
+
+
+def test_refcount_aware_eviction_skips_live_readers():
+    """policy="refcount-aware" must evict only entries with no active
+    request references; plain LRU evicts regardless."""
+    pool = make_pool()
+    a = pool.allocate(0, 2)
+    b = pool.allocate(0, 2)
+    pool.share_prefix(0, "hot", a)
+    pool.share_prefix(0, "cold", b)
+    pool.release_shared(0, a + b)             # drop the inserter's refs
+    pool.acquire_prefix(1, "hot")             # engine 1 actively reads "hot"
+
+    # refcount-aware: "cold" goes, "hot" survives its live reader
+    assert pool.evict_prefixes(0, policy="refcount-aware") == 1
+    assert pool.prefix_entries == 1
+    assert pool.acquire_prefix(2, "hot") is not None
+    pool.release_shared(2, a)
+
+    # reader done: now refcount-aware may evict it
+    pool.release_shared(1, a)
+    assert pool.evict_prefixes(0, policy="refcount-aware") == 1
+    assert pool.prefix_entries == 0
+    pool.reclaim()
+    assert pool.check_no_leaks()
+
+
+def test_lru_eviction_ignores_live_readers():
+    pool = make_pool()
+    a = pool.allocate(0, 2)
+    pool.share_prefix(0, "hot", a)
+    pool.acquire_prefix(1, "hot")
+    assert pool.evict_prefixes(0, policy="lru") == 1   # evicted anyway
+    assert pool.prefix_entries == 0
+    # the reader's request refs still pin the blocks (safe, just refaults)
+    assert pool.retired_blocks == 0
+    pool.release_shared(0, a)
+    pool.release_shared(1, a)
+    pool.reclaim()
+    assert pool.check_no_leaks()
+
+
+def test_unknown_eviction_policy_rejected():
+    pool = make_pool()
+    with pytest.raises(ValueError, match="eviction policy"):
+        pool.evict_prefixes(0, policy="mru")
