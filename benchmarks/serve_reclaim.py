@@ -37,6 +37,17 @@ Two extra axes ride on the grid:
 * **evict_policy** -- the shared-prefix comparison runs the prefix cache
   under plain LRU and under refcount-aware eviction (skip entries with
   live readers) so the two policies are directly comparable.
+* **prefill interference** (``run_prefill_interference``) -- the async
+  prefill pipeline under a long-prompt + short-decode mix: one long prompt
+  arrives with a stream of short requests behind it, and each cell runs
+  either **inline** (prefill_workers=0: the decode worker prefills the
+  long prompt -- chunked, so pings are still serviced -- before any short
+  request admits) or **async** (dedicated prefill workers; shorts decode
+  while the long prompt prefills), across a chunk sweep.  Metrics: decode
+  tok/s of the short requests (the interference axis) and the per-scheme
+  **max-ping-stall** (the worst wall-clock wait a publish-on-ping pass
+  spent between pinging the readers and seeing every publish -- bounded by
+  one chunk of forward work, not one prompt).
 
 Simulator backend: ``--sim-backend vec`` runs the simulated schemes on the
 batch-stepped numpy backend (core/sim/vec.py) instead of the generator
@@ -318,6 +329,120 @@ def run_kv_compare(n_engines: int = 2, requests: int = 8,
     return rows
 
 
+def run_prefill_interference(schemes=("EpochPOP-pool", "EpochPOP"),
+                             chunks=(4, 16), prefill_workers: int = 2,
+                             n_short: int = 4, long_len: int = 48,
+                             max_new: int = 4,
+                             sim_backend: str = "vec") -> list:
+    """Long-prompt + short-decode mix through REAL paged model traffic:
+    inline vs async prefill at each chunk size.  The short requests'
+    decode tok/s is the interference metric (inline prefill stalls them
+    behind the whole long prompt; the async stage does not), and every
+    cell records the per-scheme max-ping-stall -- the publish-on-ping
+    delivery window, which chunked prefill bounds by one chunk of forward
+    work.  Asserts the acceptance criteria: zero use-after-free
+    everywhere, and -- on the NATIVE-policy rows -- best-chunk async
+    short-decode tok/s >= best-chunk inline (per-cell numbers are printed;
+    the per-cell comparison at small chunks is GIL-noise-bound on a CPU
+    host, where a chunk forward and a decode step cannot truly overlap).
+    Simulated-scheme cells gate on UAF only: their every pool op is a
+    synchronous simulator drive under a policy-wide lock, so wall-clock
+    tok/s mixes protocol cost with host-GIL serialization -- for those
+    schemes the simulated clock is the figure of merit (see README) and
+    the value of these rows is the stall bound and the fan-out running
+    clean."""
+    import jax
+
+    from repro.configs.base import ArchConfig, dense_stack
+    from repro.models.model import init_params
+    from repro.serve.engine import ServeEngine
+
+    page, max_seq, max_batch = 4, 96, 4
+    cfg = ArchConfig(name="pf-bench", d_model=32, n_heads=4, n_kv_heads=2,
+                     d_ff=64, vocab=64, groups=dense_stack(2), remat="none",
+                     dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    long_prompt = [1 + (i % 40) for i in range(long_len)]
+    short = [3, 1, 4, 2]
+    rows = []
+    for scheme in schemes:
+        sb = sim_backend if is_simulated(scheme) else None
+        best = {"inline": 0.0, "async": 0.0}
+        for chunk in chunks:
+            pair = {}
+            for mode, n_pw in (("inline", 0), ("async", prefill_workers)):
+                # reclaim threshold low enough that publish-on-ping passes
+                # fire DURING the long prefill (the stall the metric
+                # measures) but not on every retire -- a worker-inline POP
+                # pass waits up to one chunk for the prefilling reader's
+                # publish, and paying that on every short-request retire
+                # would measure reclaim stalls, not prefill interference.
+                # The generous ping timeout keeps a mid-chunk ping WAITING
+                # for the chunk boundary: interpret-mode chunks take
+                # seconds of wall time, and a timed-out pass would report
+                # the timeout instead of the true chunk-bounded window
+                pool = BlockPool(96, n_engines=1 + n_pw + 1,
+                                 reclaim_threshold=8, pressure_factor=2,
+                                 ping_timeout_s=60.0,
+                                 policy=make_policy(scheme, backend=sb))
+                eng = ServeEngine(cfg, params, max_batch=max_batch,
+                                  page_size=page, max_seq=max_seq,
+                                  pool=pool, n_engines=1, kv_store="paged",
+                                  prefill_workers=n_pw, prefill_chunk=chunk)
+                eng.start()
+                # warmup outside the clock (kernel tracing / first dispatch)
+                eng.submit([9, 9, 9], max_new=1).done.wait(timeout=600)
+                t0 = time.perf_counter()
+                long_r = eng.submit(long_prompt, max_new=max_new)
+                shorts = [eng.submit(short[:-1] + [5 + i], max_new=max_new)
+                          for i in range(n_short)]
+                for r in shorts:
+                    r.done.wait(timeout=600)
+                t_short = time.perf_counter() - t0
+                long_r.done.wait(timeout=600)
+                t_all = time.perf_counter() - t0
+                eng.stop()
+                uaf = int(isinstance(eng.error, UseAfterFree))
+                short_toks = sum(len(r.out) for r in shorts)
+                s = pool.stats
+                row = {
+                    "scheme": scheme, "engines": 1, "pressure": "high",
+                    "workload": "prefill-interference",
+                    "prefill_mode": mode, "prefill_workers": n_pw,
+                    "prefill_chunk": chunk,
+                    "prefix_cache": False, "sim_backend": sb, "asym": False,
+                    "kv_store": "paged", "evict_policy": "lru",
+                    "requests": n_short + 1,
+                    "short_tokens": short_toks,
+                    "tok_per_s_short": short_toks / t_short,
+                    "t_short_s": t_short, "t_all_s": t_all,
+                    "prefill_tokens": eng.prefill_tokens,
+                    "max_ping_stall_s": s.max_ping_stall_s,
+                    "us_per_step": 1e6 * t_all / max(eng.steps, 1),
+                    "peak_unreclaimed": s.retired_peak, "freed": s.freed,
+                    "allocated": s.allocated, "pings": s.pings,
+                    "publishes": s.publishes, "uaf": uaf, "errors": [],
+                }
+                rows.append(row)
+                pair[mode] = row
+                print(f"# prefill-interference {scheme:14s} {mode:6s} "
+                      f"c={chunk:2d} short {row['tok_per_s_short']:6.1f} "
+                      f"tok/s (t_short={t_short:5.2f}s all={t_all:5.2f}s) "
+                      f"max_ping_stall={s.max_ping_stall_s*1e3:7.1f}ms "
+                      f"uaf={uaf}")
+                assert eng.error is None, \
+                    f"prefill-interference {scheme}/{mode} failed: " \
+                    f"{eng.error!r}"
+            for mode in pair:
+                best[mode] = max(best[mode], pair[mode]["tok_per_s_short"])
+        if not is_simulated(scheme):
+            assert best["async"] >= best["inline"], \
+                f"async prefill did not beat inline under {scheme}: " \
+                f"best {best['async']:.1f} vs {best['inline']:.1f} tok/s " \
+                f"short-decode across chunks {tuple(chunks)}"
+    return rows
+
+
 def run_grid(schemes=DEFAULT_SCHEMES, engines=(1, 2, 4),
              pressures=("low", "high"), duration: float = 0.5,
              shared: bool = True, sim_backend: str = "gen",
@@ -396,6 +521,18 @@ def run_grid(schemes=DEFAULT_SCHEMES, engines=(1, 2, 4),
 def to_csv(rows) -> list:
     out = []
     for r in rows:
+        if r["workload"] == "prefill-interference":
+            tag = (f"serve_reclaim:prefill:{r['scheme']}:"
+                   f"{r['prefill_mode']}:c{r['prefill_chunk']}")
+            if r.get("sim_backend") not in (None, "gen"):
+                tag += "@" + r["sim_backend"]
+            out.append(
+                f"{tag},{r['us_per_step']:.2f},"
+                f"tok_per_s_short={r['tok_per_s_short']:.1f};"
+                f"max_ping_stall_ms={r['max_ping_stall_s']*1e3:.1f};"
+                f"prefill_tokens={r['prefill_tokens']};"
+                f"peak_unreclaimed={r['peak_unreclaimed']};uaf={r['uaf']}")
+            continue
         if r["workload"] == "kv-compare":
             tag = f"serve_reclaim:kv:{r['kv_store']}:e{r['engines']}"
             out.append(
@@ -438,9 +575,20 @@ def main():
                     help="skip the paged-vs-dense model-traffic comparison "
                          "(it runs real decode through the Pallas kernel in "
                          "interpret mode, the slowest cells of the grid)")
+    ap.add_argument("--skip-prefill", action="store_true",
+                    help="skip the prefill-interference rows (real chunked "
+                         "prefill traffic; full runs only -- --quick always "
+                         "skips them)")
+    ap.add_argument("--prefill-workers", type=int, default=2, metavar="N",
+                    help="dedicated prefill threads for the async cells of "
+                         "the prefill-interference rows")
+    ap.add_argument("--prefill-chunk", type=int, default=None, metavar="C",
+                    help="restrict the prefill-interference chunk sweep to "
+                         "a single chunk size (default: sweep 4 and 16)")
     ap.add_argument("--out", default="results/serve_reclaim.json")
     args = ap.parse_args()
     engines = (args.engines,) if args.engines else None
+    chunks = (args.prefill_chunk,) if args.prefill_chunk else (4, 16)
     if args.quick:
         rows = run_grid(schemes=QUICK_SCHEMES, engines=engines or (1, 2),
                         pressures=("high",),
@@ -457,6 +605,10 @@ def main():
                         sim_backend=args.sim_backend)
         if not args.skip_kv:
             rows += run_kv_compare(n_engines=2)
+        if not args.skip_prefill:
+            rows += run_prefill_interference(
+                chunks=chunks, prefill_workers=args.prefill_workers,
+                sim_backend=args.sim_backend)
     # regenerate (not append): the file is the CURRENT grid, superseded
     # rows from earlier runs are dropped wholesale
     Path(args.out).parent.mkdir(parents=True, exist_ok=True)

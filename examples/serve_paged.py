@@ -11,11 +11,19 @@ feature).
     PYTHONPATH=src python examples/serve_paged.py --smr HazardPtrPOP   # any registry scheme
     PYTHONPATH=src python examples/serve_paged.py --smr EBR
     PYTHONPATH=src python examples/serve_paged.py --smr EpochPOP --sim-backend vec
+    PYTHONPATH=src python examples/serve_paged.py --kv-store paged \
+        --prefill-workers 2 --prefill-chunk 16   # async chunked prefill stage
 
 ``--kv-store paged`` stores K/V physically in the POP-managed block pool
 (runtime/kv_store.py) and decodes through the Pallas paged-attention kernel
 (interpret mode on CPU, compiled on TPU); a prefix-cache hit then installs
 NO copies -- the shared pages enter the request's block table directly.
+
+``--prefill-workers N`` splits prefill out of the decode loop into N
+dedicated threads (each a first-class SMR reader slot) running chunked
+prefill -- one batched forward per ``--prefill-chunk`` tokens with a pool
+safepoint between chunks, so a reclaimer ping landing mid-prefill is
+serviced within one chunk instead of one prompt.
 """
 
 import argparse
@@ -50,6 +58,13 @@ def main():
                     help="KV storage: 'dense' (one private cache per "
                          "request) or 'paged' (physical pages in the "
                          "SMR-managed pool, Pallas paged-attention decode)")
+    ap.add_argument("--prefill-workers", type=int, default=0, metavar="N",
+                    help="dedicated async-prefill threads (0 = prefill runs "
+                         "inline in the decode loop, still chunked)")
+    ap.add_argument("--prefill-chunk", type=int, default=16, metavar="C",
+                    help="prompt tokens per prefill forward; a pool "
+                         "safepoint between chunks bounds the ping-delivery "
+                         "window during misses")
     ap.add_argument("--requests", type=int, default=10)
     args = ap.parse_args()
 
@@ -57,13 +72,15 @@ def main():
                      d_ff=128, vocab=128, groups=dense_stack(2), remat="none",
                      dtype="float32")
     params = init_params(cfg, jax.random.PRNGKey(0))
-    pool = BlockPool(128, n_engines=args.engines + 1, reclaim_threshold=8,
-                     pressure_factor=2,
+    pool = BlockPool(128, n_engines=args.engines + args.prefill_workers + 1,
+                     reclaim_threshold=8, pressure_factor=2,
                      policy=make_policy(args.smr, backend=args.sim_backend))
     eng = ServeEngine(cfg, params, max_batch=4, page_size=8, max_seq=64,
                       pool=pool, n_engines=args.engines,
                       prefix_cache=args.prefix_cache,
-                      kv_store=args.kv_store)
+                      kv_store=args.kv_store,
+                      prefill_workers=args.prefill_workers,
+                      prefill_chunk=args.prefill_chunk)
     eng.start()
     t0 = time.time()
     # a hot shared prefix (page-aligned when --prefix-cache) + a unique tail
@@ -83,11 +100,18 @@ def main():
           f"retired_peak={s.retired_peak} "
           f"epoch_reclaims={s.epoch_reclaims} pings={s.pings} "
           f"pop_reclaims={s.pop_reclaims} touches={s.touches}")
+    if args.prefill_workers:
+        print(f"prefill stage: workers={args.prefill_workers} "
+              f"chunk={args.prefill_chunk} "
+              f"prefilled={sum(pw.requests for pw in eng.prefill_workers)} "
+              f"tokens={eng.prefill_tokens} "
+              f"max_ping_stall={s.max_ping_stall_s*1e3:.1f}ms")
     if args.prefix_cache:
+        actors = eng.workers + eng.prefill_workers
         print(f"prefix cache: hits={s.prefix_hits} misses={s.prefix_misses} "
               f"blocks_saved={s.blocks_saved} evictions={s.prefix_evictions} "
               f"prefill_tokens_skipped="
-              f"{sum(w.prefill_tokens_skipped for w in eng.workers)}")
+              f"{sum(w.prefill_tokens_skipped for w in actors)}")
     kv = eng.kv_copy_stats()
     print(f"kv_store={kv['kv_store']}: "
           f"bytes-copied/request hit={kv['bytes_per_hit']:.0f} "

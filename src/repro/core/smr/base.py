@@ -1,16 +1,25 @@
 """Common SMR interface (the paper's programmer view, §4.1.1).
 
-Every scheme exposes the same five calls the paper's setbench uses, all as
-simulator generators:
+Every scheme exposes the same five per-read calls the paper's setbench
+uses, all as simulator generators:
 
     start_op / read(slot, ptr_addr) / clear / retire(addr) / end_op
 
-plus ``alloc_node`` (so era-based schemes can tag birth eras) and an optional
+plus ``alloc_node`` (so era-based schemes can tag birth eras), an optional
 ``enter_write`` hook (a no-op everywhere except NBR+, which publishes its
-reservations and leaves the restartable region there).
+reservations and leaves the restartable region there), and the **batched
+reader sessions** the serving runtime drives -- ``reserve_many`` /
+``clear_many`` protect a whole working set (a decode step's dozens of KV
+blocks) in one call, with ``_load_many`` routing the underlying loads
+through the vec backend's single-gather path.  The default batched
+implementations fall back to the per-read loop, so a scheme only overrides
+them to amortize its publication cost (see each scheme's override and
+docs/SCHEMES.md for the per-scheme batching behavior).
 
 Data structures are written once against this interface and run unchanged
-under all ten schemes -- the paper's "drop-in replacement" property.
+under all eleven registered schemes -- the paper's "drop-in replacement"
+property -- and so does the serving block pool, which plugs any of them in
+through ``runtime/reclaim.py::SimulatedSMRPolicy``.
 """
 
 from __future__ import annotations

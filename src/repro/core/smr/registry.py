@@ -1,4 +1,8 @@
-"""Name -> SMR scheme factory, mirroring the paper's benchmark lineup."""
+"""Name -> SMR scheme factory, mirroring the paper's benchmark lineup.
+
+docs/SCHEMES.md is the human-facing reference: per-scheme paper section,
+guarantees, reservation mechanism, batched-session behavior, and which
+benchmarks exercise each name registered here."""
 
 from __future__ import annotations
 

@@ -60,6 +60,10 @@ class PoolStats:
     retired_peak: int = 0
     touches: int = 0
     reserves: int = 0
+    # worst wall-clock wait a publish-on-ping pass spent between pinging
+    # the readers and seeing every publish land (the ping-delivery window
+    # the async prefill pipeline bounds by one chunk)
+    max_ping_stall_s: float = 0.0
     # prefix-sharing counters
     prefix_hits: int = 0
     prefix_misses: int = 0
@@ -169,6 +173,40 @@ class BlockPool:
         """Engine stops using blocks it still owns (request handed off or
         aborted before retire)."""
         self._live_local[engine].difference_update(blocks)
+
+    def adopt(self, src: int, dst: int, blocks: Sequence[int],
+              shared: Sequence[int] = ()) -> None:
+        """Transfer a request's block ownership from engine ``src`` to
+        ``dst`` -- the prefill->decode handoff of the async prefill
+        pipeline.  ``blocks`` (request-private) move between the engines'
+        live sets; ``shared`` (prefix-cache) blocks move one *request
+        reference* each, so a shared block stays in ``src``'s live set when
+        another of ``src``'s requests still uses it.
+
+        Safety: only blocks of an in-flight request are ever adopted, and
+        such blocks are never on the retired list (retire happens at
+        request finish / last shared reference drop), so no policy free
+        decision can race the move.  The ledger update still runs under the
+        pool lock -- and ``dst`` gains membership before ``src`` loses it --
+        so a concurrent publish-on-ping snapshot (which copies live sets
+        under the same lock) always sees the block in at least one set.
+        """
+        if src == dst or (not blocks and not shared):
+            return
+        with self._lock:
+            self._live_local[dst].update(blocks)
+            self._live_local[src].difference_update(blocks)
+            er_s = self._engine_shared[src]
+            er_d = self._engine_shared[dst]
+            for b in shared:
+                self._live_local[dst].add(b)
+                er_d[b] = er_d.get(b, 0) + 1
+                n = er_s.get(b, 0)
+                if n <= 1:
+                    er_s.pop(b, None)
+                    self._live_local[src].discard(b)
+                else:
+                    er_s[b] = n - 1
 
     def safepoint(self, engine: int) -> None:
         """Bounded-time ping delivery point: publish-on-ping."""

@@ -144,7 +144,7 @@ class PagedKVStore:
     # ------------------------------------------------------------------
 
     def write_prefill(self, blocks: Sequence[int], k, v,
-                      start: int = 0) -> int:
+                      start: int = 0, layer: int = None) -> int:
         """Write a prefilled token range into ``blocks``.
 
         ``k``/``v``: ``(L, T, Hkv, hd)`` -- the per-layer post-rope K/V of T
@@ -153,9 +153,23 @@ class PagedKVStore:
         request's page list from position 0, so token ``start + i`` lands in
         ``blocks[(start + i) // page]`` slot ``(start + i) % page``.
         Returns the number of bytes written.
+
+        With a ``layer`` index, ``k``/``v`` are ``(T, Hkv, hd)`` slices of
+        that single layer: the chunked-prefill forward
+        (serve/paged_model.py) writes each layer's chunk right before that
+        layer's page gather, so ``start=`` is how prefill lands in the pages
+        incrementally, chunk by chunk, instead of one whole-prompt write.
         """
         k = np.asarray(k)
         v = np.asarray(v)
+        if layer is None:
+            dk, dv = self.k, self.v
+        else:
+            # promote both sides to the layer-is-leading layout -- the
+            # destinations as one-layer VIEWS, k/v as (1, T, Hkv, hd) --
+            # so a single slicing path serves both calls
+            dk, dv = self.k[layer:layer + 1], self.v[layer:layer + 1]
+            k, v = k[None], v[None]
         T = k.shape[1]
         page = self.page
         pos = start
@@ -165,8 +179,8 @@ class PagedKVStore:
             blk = blocks[pos // page]
             slot = pos % page
             n = min(page - slot, T - t)
-            self.k[:, blk, slot:slot + n] = k[:, t:t + n]
-            self.v[:, blk, slot:slot + n] = v[:, t:t + n]
+            dk[:, blk, slot:slot + n] = k[:, t:t + n]
+            dv[:, blk, slot:slot + n] = v[:, t:t + n]
             written += 2 * k[:, t:t + n].nbytes
             pos += n
             t += n

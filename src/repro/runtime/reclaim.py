@@ -150,10 +150,15 @@ class EpochPOPPolicy(ReclaimPolicy):
             ev.clear()
 
     def _publish(self, engine: int) -> None:
-        # copy-then-publish: the set swap is atomic under the GIL
+        # copy under the pool lock: live sets are no longer single-writer
+        # (BlockPool.adopt moves blocks between engines on the prefill ->
+        # decode handoff), and copying a set mid-mutation is an error; the
+        # published-set swap itself is atomic under the GIL
         pool = self.pool
-        self._live_published[engine] = (
-            set(pool._live_local[engine]) | set(pool._session[engine]))
+        with pool._lock:
+            published = (set(pool._live_local[engine])
+                         | set(pool._session[engine]))
+        self._live_published[engine] = published
         self._publish_counter[engine] += 1
         pool.stats.publishes += 1
 
@@ -207,9 +212,10 @@ class EpochPOPPolicy(ReclaimPolicy):
             cut = pool._epoch
         snap = list(self._publish_counter)
         others = [i for i in range(pool.n_engines) if i != engine]
+        t_ping = time.monotonic()
         for i in others:
             self._ping_flags[i].set()
-        deadline = time.monotonic() + self._ping_timeout_s
+        deadline = t_ping + self._ping_timeout_s
         pending = set(others)
         while pending and time.monotonic() < deadline:
             if engine is not None:
@@ -221,6 +227,11 @@ class EpochPOPPolicy(ReclaimPolicy):
                        if self._publish_counter[i] <= snap[i]}
             if pending:
                 time.sleep(0.0005)
+        # the ping-delivery window this pass actually experienced: how long
+        # the slowest reader took to reach a safepoint and publish (the
+        # chunked-prefill bound the serve_reclaim grid reports per scheme)
+        stall = time.monotonic() - t_ping
+        pool.stats.max_ping_stall_s = max(pool.stats.max_ping_stall_s, stall)
         if pending:
             # Assumption 1 violated (engine died?): stay safe, free nothing
             # beyond what epochs allow.
@@ -229,8 +240,11 @@ class EpochPOPPolicy(ReclaimPolicy):
         for i in others:
             reserved |= self._live_published[i]
         if engine is not None:
-            reserved |= set(pool._live_local[engine])
-            reserved |= set(pool._session[engine])
+            with pool._lock:
+                # same adopt-vs-read race as _publish: our own live set may
+                # be mid-handoff on another thread
+                reserved |= set(pool._live_local[engine])
+                reserved |= set(pool._session[engine])
         freed = pool._return_blocks_if(
             lambda b, e: e < cut and b not in reserved)
         if freed:
@@ -380,12 +394,20 @@ class SimulatedSMRPolicy(ReclaimPolicy):
         Retired nodes live with the thread that retired them, so a dedicated
         reclaimer thread (which retires nothing itself) must flush its peers;
         the policy-wide lock makes cross-thread drives safe."""
+        t0 = time.monotonic()
         with self._mtx:
             before = self.pool.stats.freed
             for tid in range(self.pool.n_engines):
                 t = self.sim.threads[tid]
                 self.sim.drive(tid, self.smr.flush(t))
             self._collect_freed()
+            # pings are delivered inline while the drive runs, so the wall
+            # time of the pass IS the reclaimer's ping stall here (it also
+            # includes waiting on the policy lock behind a mid-prefill
+            # drive -- exactly the contention the chunk bound caps)
+            stall = time.monotonic() - t0
+            s = self.pool.stats
+            s.max_ping_stall_s = max(s.max_ping_stall_s, stall)
             return self.pool.stats.freed - before
 
     def flush(self) -> int:

@@ -32,13 +32,15 @@ from repro.models.model import apply_model
 from repro.runtime.block_pool import BlockPool
 from repro.runtime.kv_store import PagedKVStore
 from repro.serve.scheduler import Scheduler
-from repro.serve.worker import EngineWorker, Reclaimer, Request
+from repro.serve.worker import (EngineWorker, PrefillWorker, Reclaimer,
+                                Request)
 
 __all__ = ["PagedKVStore", "Request", "ServeEngine"]
 
 
 class ServeEngine:
-    """Facade: Scheduler + N EngineWorkers + Reclaimer over one BlockPool.
+    """Facade: Scheduler + N EngineWorkers + optional PrefillWorkers +
+    Reclaimer over one BlockPool.
 
     ``kv_store`` selects the KV storage layer: ``"dense"`` keeps one private
     jax cache per request (the historical path, any architecture);
@@ -47,6 +49,16 @@ class ServeEngine:
     ids and decodes through the Pallas paged-attention kernel (GQA configs;
     see serve/paged_model.py).  Both paths run under every SMR policy, so
     they A/B cleanly in the benchmarks.
+
+    ``prefill_workers``/``prefill_chunk`` configure the async prefill
+    pipeline: N dedicated prefill threads (each its own SMR reader slot in
+    the pool) run chunked prefill -- one batched forward per
+    ``prefill_chunk`` tokens, a pool safepoint between chunks -- and hand
+    ready requests to the decode workers.  With ``prefill_workers=0``
+    decode admission runs the same chunked prefill inline, so the
+    ping-delivery window is chunk-bounded either way; the dedicated stage
+    additionally keeps co-batched decodes flowing while long prompts
+    prefill.
     """
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
@@ -57,7 +69,8 @@ class ServeEngine:
                  reclaim_interval_s: float = 0.002,
                  sim_backend: str = "gen", sim_costs=None,
                  kv_store: str = "dense", kernel_impl: Optional[str] = None,
-                 evict_policy: str = "lru"):
+                 evict_policy: str = "lru",
+                 prefill_workers: int = 0, prefill_chunk: int = 16):
         self.cfg = cfg
         self.params = params
         if kv_store not in ("dense", "paged"):
@@ -68,13 +81,20 @@ class ServeEngine:
             # reclaimer thread mid-run
             raise ValueError(f"evict_policy must be 'lru' or "
                              f"'refcount-aware', got {evict_policy!r}")
+        if prefill_workers < 0 or prefill_chunk < 1:
+            raise ValueError(
+                f"need prefill_workers >= 0 and prefill_chunk >= 1, got "
+                f"{prefill_workers}/{prefill_chunk}")
+        n_actors = n_engines + prefill_workers
         if pool is None:
             from repro.runtime.reclaim import make_policy
-            # one engine slot per worker + one for the dedicated reclaimer;
-            # sim_backend/sim_costs select the simulator backend and the
-            # (possibly per-engine asymmetric) cost model when ``smr`` names
-            # a simulated scheme -- the native pool policy ignores them
-            pool = BlockPool(num_pages, n_engines=n_engines + 1,
+            # one engine slot per decode worker AND per prefill worker
+            # (prefill readers join the ping fan-out as first-class slots)
+            # + one for the dedicated reclaimer; sim_backend/sim_costs
+            # select the simulator backend and the (possibly per-engine
+            # asymmetric) cost model when ``smr`` names a simulated scheme
+            # -- the native pool policy ignores them
+            pool = BlockPool(num_pages, n_engines=n_actors + 1,
                              reclaim_threshold=16,
                              policy=make_policy(smr, backend=sim_backend,
                                                 costs=sim_costs))
@@ -85,9 +105,10 @@ class ServeEngine:
                 "sim_backend/sim_costs only apply when ServeEngine builds "
                 "the pool; configure them on the supplied pool's policy "
                 "instead")
-        if pool.n_engines < n_engines:
+        if pool.n_engines < n_actors:
             raise ValueError(
-                f"pool has {pool.n_engines} engine slots, need {n_engines}")
+                f"pool has {pool.n_engines} engine slots, need {n_actors} "
+                f"({n_engines} decode + {prefill_workers} prefill)")
         self.pool = pool
         self.n_engines = n_engines
         # paged KV mode: ONE physical page store shared by every worker,
@@ -108,16 +129,26 @@ class ServeEngine:
                          max_batch=max_batch, page_size=page_size,
                          max_seq=max_seq, prefix_cache=prefix_cache,
                          kv_store=self.kv_store, kernel_impl=kernel_impl,
-                         evict_policy=evict_policy)
+                         evict_policy=evict_policy,
+                         prefill_chunk=prefill_chunk)
             for i in range(n_engines)]
+        # prefill workers take the engine ids right after the decode fleet
+        self.prefill_workers: List[PrefillWorker] = [
+            PrefillWorker(n_engines + j, cfg, params, pool, self._decode,
+                          page_size=page_size, max_seq=max_seq,
+                          prefix_cache=prefix_cache, kv_store=self.kv_store,
+                          kernel_impl=kernel_impl, evict_policy=evict_policy,
+                          prefill_chunk=prefill_chunk)
+            for j in range(prefill_workers)]
         # dedicated reclaimer only if the pool has a spare engine slot;
         # otherwise workers reclaim on pressure (pre-split behavior)
         self.reclaimer: Optional[Reclaimer] = None
-        if pool.n_engines > n_engines:
-            self.reclaimer = Reclaimer(pool, engine_id=n_engines,
+        if pool.n_engines > n_actors:
+            self.reclaimer = Reclaimer(pool, engine_id=n_actors,
                                        interval_s=reclaim_interval_s,
                                        evict_policy=evict_policy)
-        self.scheduler = Scheduler(self.workers, self.reclaimer)
+        self.scheduler = Scheduler(self.workers, self.reclaimer,
+                                   prefill_workers=self.prefill_workers)
 
     # -- client API (unchanged from the monolithic engine) --
 
@@ -138,16 +169,25 @@ class ServeEngine:
     def error(self) -> Optional[BaseException]:
         return self.scheduler.error
 
+    @property
+    def prefill_tokens(self) -> int:
+        """Prompt tokens prefilled across the whole pipeline (dedicated
+        prefill workers + any inline remainder the decode workers ran)."""
+        actors = self.workers + self.prefill_workers
+        return sum(a.prefill_tokens for a in actors)
+
     def kv_copy_stats(self) -> dict:
-        """Aggregate bytes-copied-per-request accounting across workers:
-        how many KV bytes admission installed into per-request storage,
-        split by prefix-cache outcome.  The paged path's headline number is
-        ``bytes_per_hit`` ~ 0 (shared pages enter the block table, nothing
-        is copied); the dense path pays a full cache per request."""
-        hit_b = sum(w.kv_bytes_copied_hit for w in self.workers)
-        miss_b = sum(w.kv_bytes_copied_miss for w in self.workers)
-        hits = sum(w.admitted_hit for w in self.workers)
-        misses = sum(w.admitted_miss for w in self.workers)
+        """Aggregate bytes-copied-per-request accounting across all pool
+        actors (decode workers and prefill workers): how many KV bytes
+        admission installed into per-request storage, split by prefix-cache
+        outcome.  The paged path's headline number is ``bytes_per_hit`` ~ 0
+        (shared pages enter the block table, nothing is copied); the dense
+        path pays a full cache per request."""
+        actors = self.workers + self.prefill_workers
+        hit_b = sum(w.kv_bytes_copied_hit for w in actors)
+        miss_b = sum(w.kv_bytes_copied_miss for w in actors)
+        hits = sum(w.admitted_hit for w in actors)
+        misses = sum(w.admitted_miss for w in actors)
         return {
             "kv_store": "paged" if self.kv_store is not None else "dense",
             "admitted_hit": hits, "admitted_miss": misses,

@@ -39,8 +39,8 @@ from repro.models.layers import apply_rope, rms_norm
 from repro.models.model import apply_model
 from repro.runtime.kv_store import PagedKVStore, kv_layer_order
 
-__all__ = ["check_paged_support", "prefill_kv", "paged_decode_step",
-           "paged_impl"]
+__all__ = ["check_paged_support", "prefill_kv", "prefill_kv_chunked",
+           "prefill_chunk_step", "paged_decode_step", "paged_impl"]
 
 
 def check_paged_support(cfg: ArchConfig) -> None:
@@ -109,39 +109,35 @@ def prefill_kv(params, cfg: ArchConfig,
 
 
 # ----------------------------------------------------------------------------
-# decode: batched step over block tables
+# shared forward: decode steps and prefill chunks are the same math
 # ----------------------------------------------------------------------------
 
 
-def paged_decode_step(
-    params,
-    cfg: ArchConfig,
-    store: PagedKVStore,
-    blocks: Sequence[Sequence[int]],     # per-request page lists (shared first)
-    lens: Sequence[int],                 # tokens already stored per request
-    last_tokens: Sequence[int],          # token fed this step, per request
-    *,
-    impl: str = "interpret",
-) -> jnp.ndarray:
-    """One batched decode step for a ragged batch of requests.
+def _paged_forward(params, cfg: ArchConfig, store: PagedKVStore,
+                   blocks, lens, tokens, *, impl: str,
+                   write_layer) -> jnp.ndarray:
+    """The transformer loop both paged entry points share: embed the fed
+    tokens (one per row), and per layer project -> rope -> hand the new K/V
+    to ``write_layer`` (which scatters them into the physical pages) ->
+    gather through the padded block table with the paged-attention kernel.
 
-    For each request the fed token's K/V is appended at page slot
-    ``lens[b]`` (a single scatter into the shared physical pool), then every
-    layer's attention gathers through the padded block table -- prefix-
-    shared pages are read in place, whichever engine wrote them.  Returns
-    the ``(B, vocab_padded)`` logits of the new position.
+    ``blocks``/``lens``/``tokens`` are per-ROW: a decode step has one row
+    per request (each its own block list); a prefill chunk has one row per
+    chunk position, all rows sharing ONE block list with consecutive
+    positions.  Causality is the kernel's length masking: row i's K/V is in
+    the pages before any row gathers (``write_layer`` runs first), and row
+    i attends only to positions < lens[i] + 1.
     """
     from repro.kernels import ops as kops
 
     B = len(blocks)
-    page = store.page
     dt = jnp.dtype(cfg.dtype)
     lens_np = np.asarray(lens, np.int64)
     table, _ = store.gather_table(blocks, [n + 1 for n in lens_np])
     att_lens = jnp.asarray(lens_np + 1, jnp.int32)
     positions = jnp.asarray(lens_np, jnp.int32)[:, None]     # (B,1)
 
-    toks = jnp.asarray(list(last_tokens), jnp.int32)[:, None]  # (B,1)
+    toks = jnp.asarray(list(tokens), jnp.int32)[:, None]       # (B,1)
     x = jnp.take(params["embed"], toks, axis=0).astype(dt)     # (B,1,D)
     if cfg.embed_scale:
         x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
@@ -163,15 +159,13 @@ def paged_decode_step(
         q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_pct)
         k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_pct)
 
-        # physical append: token b lands in its page BEFORE the gather, so
-        # the new position attends to itself exactly like the dense path
-        # (model dtype preserved end to end)
+        # physical write: every row's K/V lands in its page BEFORE the
+        # gather, so each new position attends to itself (and, in a prefill
+        # chunk, to its chunk-mates) exactly like the dense path -- model
+        # dtype preserved end to end
         k_np = np.asarray(k[:, 0])                           # (B, Hkv, hd)
         v_np = np.asarray(v[:, 0])
-        for b in range(B):
-            pos = int(lens_np[b])
-            store.append_token(blocks[b][pos // page], pos % page,
-                               k_np[b], v_np[b], layer=li)
+        write_layer(li, k_np, v_np)
 
         k_pages, v_pages = store.layer_pages(li)
         out = kops.paged_attention(
@@ -201,3 +195,113 @@ def paged_decode_step(
         pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
         logits = jnp.where(pad_mask, logits, -1e30)
     return logits[:, 0]
+
+
+# ----------------------------------------------------------------------------
+# decode: batched step over block tables
+# ----------------------------------------------------------------------------
+
+
+def paged_decode_step(
+    params,
+    cfg: ArchConfig,
+    store: PagedKVStore,
+    blocks: Sequence[Sequence[int]],     # per-request page lists (shared first)
+    lens: Sequence[int],                 # tokens already stored per request
+    last_tokens: Sequence[int],          # token fed this step, per request
+    *,
+    impl: str = "interpret",
+) -> jnp.ndarray:
+    """One batched decode step for a ragged batch of requests.
+
+    For each request the fed token's K/V is appended at page slot
+    ``lens[b]`` (a single scatter into the shared physical pool), then every
+    layer's attention gathers through the padded block table -- prefix-
+    shared pages are read in place, whichever engine wrote them.  Returns
+    the ``(B, vocab_padded)`` logits of the new position.
+    """
+    page = store.page
+    lens_np = np.asarray(lens, np.int64)
+
+    def write_layer(li, k_np, v_np):
+        for b in range(len(blocks)):
+            pos = int(lens_np[b])
+            store.append_token(blocks[b][pos // page], pos % page,
+                               k_np[b], v_np[b], layer=li)
+
+    return _paged_forward(params, cfg, store, blocks, lens, last_tokens,
+                          impl=impl, write_layer=write_layer)
+
+
+# ----------------------------------------------------------------------------
+# chunked prefill: q block x page gather (the async prefill pipeline's unit)
+# ----------------------------------------------------------------------------
+
+
+def prefill_chunk_step(
+    params,
+    cfg: ArchConfig,
+    store: PagedKVStore,
+    blocks: Sequence[int],               # the ONE request's page list
+    tokens: Sequence[int],               # the chunk's prompt tokens
+    start: int,                          # sequence position of tokens[0]
+    *,
+    impl: str = "interpret",
+) -> jnp.ndarray:
+    """One chunked-prefill forward: the chunk's positions become batch ROWS
+    over one shared block table (the ROADMAP's "q block x page gather").
+
+    Row i carries prompt position ``start + i``; its K/V is written into
+    the physical pages (one :meth:`PagedKVStore.write_prefill` slice per
+    layer, ``start=`` addressed) before any row gathers, and the kernel's
+    per-row length mask (``att_len = start + i + 1``) keeps attention
+    causal within the chunk while earlier chunks -- and prefix-shared pages
+    -- are gathered in place.  Returns the ``(chunk, vocab_padded)`` logits
+    (the last row is the next-token distribution after the chunk).
+    """
+    c = len(tokens)
+    rows = [list(blocks)] * c
+    lens = list(range(start, start + c))
+
+    def write_layer(li, k_np, v_np):                          # (c, Hkv, hd)
+        store.write_prefill(blocks, k_np, v_np, start=start, layer=li)
+
+    return _paged_forward(params, cfg, store, rows, lens, tokens,
+                          impl=impl, write_layer=write_layer)
+
+
+def prefill_kv_chunked(
+    params,
+    cfg: ArchConfig,
+    store: PagedKVStore,
+    blocks: Sequence[int],
+    prompt: Sequence[int],
+    chunk: int,
+    *,
+    start: int = 0,
+    impl: str = "interpret",
+):
+    """Chunked paged prefill of ``prompt[start:]``: a generator issuing one
+    batched forward per ``chunk`` tokens and yielding ``(end, logits)``
+    after each, where ``end`` is the number of prompt tokens whose K/V now
+    physically sits in the pages.
+
+    The caller runs its safepoint (``pool.safepoint``) between iterations,
+    which is the whole point of chunking: a reclaimer ping that lands
+    mid-prefill is serviced at the next chunk boundary, so the publish-on-
+    ping delivery window is bounded by ``chunk`` tokens of forward work
+    instead of the entire prompt.  ``start`` resumes a partial prefill (a
+    prefix-cache hit, or a request handed between prefill workers); the
+    generator can be abandoned mid-prompt and re-entered later with
+    ``start=`` wherever it left off.
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    pos = start
+    n = len(prompt)
+    while pos < n:
+        toks = list(prompt[pos:pos + chunk])
+        logits = prefill_chunk_step(params, cfg, store, blocks, toks, pos,
+                                    impl=impl)
+        pos += len(toks)
+        yield pos, logits

@@ -1,30 +1,50 @@
-"""Scheduler: admission and request->engine placement for the sharded
-serving runtime.
+"""Scheduler: admission, the prefill queue, and request->engine placement
+for the sharded serving runtime.
 
 The scheduler is the single client-facing entry point.  It hands out
-request ids under a lock (clients submit from many threads), places each
-request on the least-loaded live worker (outstanding queue + in-flight
-batch), and owns the lifecycle of the worker fleet plus the dedicated
-reclaimer.  Continuous batching itself stays in the workers: each admits
-from its own queue up to ``max_batch`` at every step boundary, so admission
+request ids under a lock (clients submit from many threads), routes fresh
+requests either into the shared **prefill queue** (when dedicated
+:class:`~repro.serve.worker.PrefillWorker` threads are configured) or
+straight onto the least-loaded live decode worker, and owns the lifecycle
+of both worker fleets plus the dedicated reclaimer.
+
+The prefill queue is one shared ``queue.Queue`` drained by every prefill
+worker (work stealing -- an idle worker picks up whatever is oldest,
+including partially prefilled requests a stopping peer re-queued).  When a
+prefill worker finishes a request it calls :meth:`place_ready`, which runs
+the same least-loaded placement ``submit`` uses -- so decode load balancing
+is identical whether prefill happened upstream or will happen inline.  If
+every prefill worker has failed, ``submit`` degrades gracefully to direct
+decode placement (decode workers still run chunked prefill inline).
+
+Continuous batching itself stays in the decode workers: each admits from
+its own queue up to ``max_batch`` at every step boundary, so admission
 never blocks a decode step on another engine's queue lock.
 """
 
 from __future__ import annotations
 
+import queue
 import threading
 from typing import List, Optional, Sequence
 
-from repro.serve.worker import EngineWorker, Reclaimer, Request
+from repro.serve.worker import (EngineWorker, PrefillWorker, Reclaimer,
+                                Request)
 
 
 class Scheduler:
-    """Admission + placement over N workers and one reclaimer."""
+    """Admission + placement over N decode workers, optional prefill
+    workers, and one reclaimer."""
 
     def __init__(self, workers: Sequence[EngineWorker],
-                 reclaimer: Optional[Reclaimer] = None):
+                 reclaimer: Optional[Reclaimer] = None,
+                 prefill_workers: Sequence[PrefillWorker] = ()):
         self.workers: List[EngineWorker] = list(workers)
         self.reclaimer = reclaimer
+        self.prefill_workers: List[PrefillWorker] = list(prefill_workers)
+        self.prefill_queue: "queue.Queue[Request]" = queue.Queue()
+        for pw in self.prefill_workers:
+            pw.bind(self)
         self._rid = 0
         self._rid_lock = threading.Lock()
         self._place = 0         # round-robin tiebreak cursor
@@ -35,15 +55,46 @@ class Scheduler:
         with self._rid_lock:
             self._rid += 1
             rid = self._rid
+        r = Request(rid, list(prompt), max_new)
+        # empty prompts skip the prefill stage (nothing to prefill; decode
+        # admission finishes them immediately)
+        if r.prompt and any(pw.error is None for pw in self.prefill_workers):
+            self.prefill_queue.put(r)
+            if not any(pw.error is None for pw in self.prefill_workers):
+                # the last prefill worker died between the liveness check
+                # and the put: its dead-stage reroute may already have
+                # drained the queue, so reroute again -- otherwise this
+                # request would sit unread forever
+                self.reroute_prefill_queue()
+            return r
+        return self.place_ready(r)
+
+    def reroute_prefill_queue(self) -> None:
+        """Hand every queued prefill request -- partially prefilled ones
+        included -- to the decode fleet, whose admission runs the same
+        chunked prefill inline (and adopts any blocks a dead prefill
+        worker still owns).  Called when the prefill stage has failed;
+        queue.get exclusivity guarantees each request is placed once even
+        if several threads reroute concurrently."""
+        while True:
+            try:
+                r = self.prefill_queue.get_nowait()
+            except queue.Empty:
+                return
+            self.place_ready(r)
+
+    def place_ready(self, r: Request) -> Request:
+        """Least-loaded placement onto a live decode worker (round-robin
+        among ties).  Entry point for both fresh submissions (no prefill
+        stage) and prefill-worker handoffs of ready/partial requests."""
+        with self._rid_lock:
             self._place += 1
             tiebreak = self._place
-        r = Request(rid, list(prompt), max_new)
         alive = [w for w in self.workers if w.error is None]
         if not alive:
             # whole fleet failed: release the waiter immediately
             r.done.set()
             return r
-        # least-loaded placement, round-robin among ties
         n = len(self.workers)
         w = min(alive, key=lambda w: (w.load, (w.engine_id + tiebreak) % n))
         w.enqueue(r)
@@ -54,10 +105,28 @@ class Scheduler:
     def start(self) -> None:
         for w in self.workers:
             w.start()
+        for pw in self.prefill_workers:
+            pw.start()
         if self.reclaimer is not None:
             self.reclaimer.start()
 
     def stop(self) -> None:
+        # prefill first: a worker stopped mid-request re-queues it
+        # (resumable) instead of handing work to decoders that are about
+        # to stop
+        for pw in self.prefill_workers:
+            pw.stop()
+        # finalize whatever is stranded on the prefill queue, including
+        # partially prefilled requests the stopping workers re-queued:
+        # release their waiters and give their blocks back to the pool
+        # (retire/release under the owning engine id), so shutdown leaves
+        # the pool leak-free and no client hangs on done.wait
+        while self.prefill_workers:
+            try:
+                r = self.prefill_queue.get_nowait()
+            except queue.Empty:
+                break
+            self.prefill_workers[0]._finalize(r)
         for w in self.workers:
             w.stop()
         if self.reclaimer is not None:
@@ -78,6 +147,9 @@ class Scheduler:
         for w in self.workers:
             if w.error is not None:
                 return w.error
+        for pw in self.prefill_workers:
+            if pw.error is not None:
+                return pw.error
         if self.reclaimer is not None:
             return self.reclaimer.error
         return None

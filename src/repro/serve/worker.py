@@ -1,5 +1,5 @@
-"""Engine workers and the reclaimer: the thread-level actors of the sharded
-serving runtime.
+"""Engine workers, prefill workers, and the reclaimer: the thread-level
+actors of the sharded serving runtime.
 
 Each :class:`EngineWorker` is an independent SMR *reader* over the shared
 :class:`~repro.runtime.block_pool.BlockPool`: it owns one engine id, brackets
@@ -10,8 +10,24 @@ pass genuinely fans out to N concurrent readers -- the paper's signal-cost
 scaling scenario -- instead of the single hard-coded reader the monolithic
 engine had.
 
-Prefix sharing: when enabled, a worker admitting a request first asks the
-pool's content-keyed prefix cache for the longest page-aligned prompt prefix
+Prefill is a pipeline stage of its own: with ``prefill_workers >= 1`` on the
+engine facade, N :class:`PrefillWorker` threads -- each ALSO a first-class
+SMR reader with its own engine id and slots -- drain the scheduler's shared
+prefill queue, run **chunked** prefill (`serve/paged_model.py
+prefill_kv_chunked`: one batched forward per ``prefill_chunk`` tokens with a
+``pool.safepoint()`` between chunks), and hand completed -- or partially
+prefilled, resumable -- requests to decode workers through the scheduler.
+Decode admission then only ever installs ready pages.  The point is the
+publish-on-ping delivery window: a full-prompt prefill inside the decode
+loop stretches the window a reclaimer ping waits on to an entire prompt
+(the paper's "delayed thread" regime, where EpochPOP degrades toward its HP
+fallback); per-chunk safepoints bound it by ``prefill_chunk`` tokens, and
+the dedicated stage keeps co-batched decodes flowing while long prompts
+prefill.  Without prefill workers the decode worker runs the same chunked
+prefill inline at admission, so the chunk bound holds either way.
+
+Prefix sharing: when enabled, admitting a request first asks the pool's
+content-keyed prefix cache for the longest page-aligned prompt prefix
 already prefilled by any worker.  A hit reuses the shared blocks (refcounted
 by the pool) AND the prefilled KV state, so the worker skips both the
 allocation and the prefill compute for those tokens.  On finish, shared
@@ -59,6 +75,18 @@ class Request:
     out: List[int] = field(default_factory=list)
     blocks: List[int] = field(default_factory=list)         # private
     shared_blocks: List[int] = field(default_factory=list)  # prefix-shared
+    # prefill pipeline state: how many prompt tokens have materialized KV
+    # (pages or dense cache), whether admission was a prefix-cache hit
+    # (the bytes-copied classification), how many prefix tokens are
+    # already published to the cache (hit_len -- also advanced when WE
+    # publish, so it cannot double-insert), which engine id currently
+    # owns the blocks (handoff transfers via BlockPool.adopt), and --
+    # dense mode only -- the cache being built (the handoff payload)
+    prefilled: int = 0
+    cache_hit: bool = False
+    hit_len: int = 0
+    owner: Optional[int] = None
+    cache: Optional[dict] = None
     done: threading.Event = field(default_factory=threading.Event)
 
     @property
@@ -66,25 +94,28 @@ class Request:
         return self.shared_blocks + self.blocks
 
 
-class EngineWorker:
-    """One engine id of the pool: continuous-batching decode loop, SMR
-    reader sessions, optional prefix-cache admission."""
+class _PoolActor:
+    """Shared behavior of every pool actor that admits and prefills
+    requests (decode workers and prefill workers): prefix-cache lookup,
+    pressure-aware allocation, and the CHUNKED prefill loop itself --
+    identical whether it runs in the dedicated prefill stage or inline at
+    decode admission."""
 
     def __init__(self, engine_id: int, cfg, params, pool: BlockPool, decode,
-                 *, max_batch: int = 8, page_size: int = 16,
-                 max_seq: int = 256, prefix_cache: bool = False,
+                 *, page_size: int = 16, max_seq: int = 256,
+                 prefix_cache: bool = False,
                  kv_store: Optional[PagedKVStore] = None,
                  kernel_impl: Optional[str] = None,
-                 evict_policy: str = "lru"):
+                 evict_policy: str = "lru", prefill_chunk: int = 16):
         self.engine_id = engine_id
         self.cfg = cfg
         self.params = params
         self.pool = pool
-        self.max_batch = max_batch
         self.page = page_size
         self.max_seq = max_seq
         self.prefix_cache = prefix_cache
         self.evict_policy = evict_policy
+        self.prefill_chunk = prefill_chunk
         self._decode = decode
         # paged KV mode: physical pages + Pallas kernel instead of dense
         # per-request caches (None = dense, the historical path)
@@ -93,11 +124,7 @@ class EngineWorker:
             from repro.serve.paged_model import paged_impl
             kernel_impl = paged_impl()
         self.kernel_impl = kernel_impl
-        self.queue: "queue.Queue[Request]" = queue.Queue()
-        self.running: Dict[int, Request] = {}
-        self._caches: Dict[int, dict] = {}
         self._stop = threading.Event()
-        self.steps = 0
         self.prefill_tokens = 0
         self.prefill_tokens_skipped = 0
         # bytes of KV installed into per-request private storage at
@@ -111,36 +138,6 @@ class EngineWorker:
         self._dense_cache_bytes: Optional[int] = None
         self.error: Optional[BaseException] = None
         self._thread: Optional[threading.Thread] = None
-
-    # -- scheduler-facing API --
-
-    @property
-    def load(self) -> int:
-        """Outstanding work (queued + in flight); placement key."""
-        return self.queue.qsize() + len(self.running)
-
-    def enqueue(self, r: Request) -> None:
-        self.queue.put(r)
-        if self.error is not None:
-            # worker already failed: it will never drain the queue again
-            self.drain_queue()
-
-    def drain_queue(self) -> None:
-        while True:
-            try:
-                self.queue.get_nowait().done.set()
-            except queue.Empty:
-                return
-
-    def start(self) -> None:
-        self._thread = threading.Thread(
-            target=self._loop, daemon=True, name=f"engine-{self.engine_id}")
-        self._thread.start()
-
-    def stop(self) -> None:
-        self._stop.set()
-        if self._thread:
-            self._thread.join(timeout=30)
 
     # -- admission (prefix-cache aware) --
 
@@ -199,121 +196,145 @@ class EngineWorker:
                     raise
         raise AssertionError("unreachable")
 
-    def _admit(self) -> None:
-        while len(self.running) < self.max_batch:
-            try:
-                r = self.queue.get_nowait()
-            except queue.Empty:
-                return
-            if not r.prompt:
-                # empty request: nothing to decode from; finish immediately
-                # (the kernel-level empty-row case is exercised directly in
-                # the block-table raggedness tests)
-                r.done.set()
-                continue
-            shared: List[int] = []
-            cache, plen = None, 0
-            if self.prefix_cache:
-                shared, cache, plen = self._lookup_prefix(r)
-            n_total = (len(r.prompt) + r.max_new + self.page - 1) // self.page
-            try:
-                r.blocks = self._allocate(n_total - len(shared))
-            except OutOfBlocks:
-                if shared:
-                    self.pool.release_shared(self.engine_id, shared)
-                    self.pool.rollback_prefix_hit(len(shared))
-                self.queue.put(r)   # retry later
-                return
-            r.shared_blocks = shared
-            self.prefill_tokens_skipped += plen
-            n_full = len(r.prompt) // self.page
-            if self.kv_store is not None:
-                self._admit_paged(r, plen, n_full)
-            else:
-                self._admit_dense(r, cache, plen, n_full)
-            self.running[r.rid] = r
-            if plen:
-                self.admitted_hit += 1
-            else:
-                self.admitted_miss += 1
-
-    def _admit_dense(self, r: Request, cache, plen: int, n_full: int) -> None:
-        """Dense admission: private jax cache, token-by-token prefill of the
-        uncached remainder, KV *snapshot* published at the page boundary."""
-        if cache is None:
-            cache = init_cache(self.cfg, 1, self.max_seq, self.cfg.dtype)
-        if self._dense_cache_bytes is None:
-            self._dense_cache_bytes = sum(
-                int(np.prod(leaf.shape)) * leaf.dtype.itemsize
-                for leaf in jax.tree.leaves(cache))
-        # the request's KV is a full private cache either way: a hit merely
-        # seeds it from the snapshot (which the first decode write copies)
+    def _admit_blocks(self, r: Request) -> bool:
+        """First-touch admission: prefix lookup + block allocation (and, in
+        dense mode, the private cache install).  Returns False -- with the
+        request rolled back untouched -- when the pool is out of blocks.
+        On success the caller's engine owns the request's blocks
+        (``r.owner``) and ``r.prefilled`` reflects the prefix hit."""
+        shared: List[int] = []
+        cache, plen = None, 0
+        if self.prefix_cache:
+            shared, cache, plen = self._lookup_prefix(r)
+        n_total = (len(r.prompt) + r.max_new + self.page - 1) // self.page
+        try:
+            r.blocks = self._allocate(n_total - len(shared))
+        except OutOfBlocks:
+            if shared:
+                self.pool.release_shared(self.engine_id, shared)
+                self.pool.rollback_prefix_hit(len(shared))
+            return False
+        r.shared_blocks = shared
+        r.prefilled = r.hit_len = plen
+        r.cache_hit = plen > 0
+        r.owner = self.engine_id
+        self.prefill_tokens_skipped += plen
         if plen:
-            self.kv_bytes_copied_hit += self._dense_cache_bytes
+            self.admitted_hit += 1
         else:
-            self.kv_bytes_copied_miss += self._dense_cache_bytes
-        # prefill the uncached remainder token-by-token, snapshotting the
-        # cache at the last full-page boundary so the prefix is reusable
+            self.admitted_miss += 1
+        if self.kv_store is None:
+            # the request's KV is a full private cache either way: a hit
+            # merely seeds it from the snapshot (which the first write
+            # copies); count the install bytes here, where the cache is born
+            if cache is None:
+                cache = init_cache(self.cfg, 1, self.max_seq, self.cfg.dtype)
+            r.cache = cache
+            if self._dense_cache_bytes is None:
+                self._dense_cache_bytes = sum(
+                    int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+                    for leaf in jax.tree.leaves(cache))
+            if plen:
+                self.kv_bytes_copied_hit += self._dense_cache_bytes
+            else:
+                self.kv_bytes_copied_miss += self._dense_cache_bytes
+        return True
+
+    def _adopt(self, r: Request) -> None:
+        """Take ownership of a handed-off request's blocks (prefill ->
+        decode, or a resumable partial prefill picked up by a peer)."""
+        if r.owner is not None and r.owner != self.engine_id:
+            self.pool.adopt(r.owner, self.engine_id, r.blocks,
+                            r.shared_blocks)
+            r.owner = self.engine_id
+
+    # -- chunked prefill (the bounded ping-delivery window) --
+
+    def _run_prefill(self, r: Request) -> bool:
+        """Materialize r's prompt KV from ``r.prefilled`` to the end, with a
+        ``pool.safepoint`` between chunks so a reclaimer ping that lands
+        mid-prefill is serviced within ONE chunk of forward work.  Returns
+        False if stopped mid-prompt -- the request is left resumable
+        (``r.prefilled`` partial, blocks still owned) for a peer or a later
+        admission to continue from."""
+        if r.prefilled >= len(r.prompt):
+            self._publish_prefix(r)          # full-hit: nothing to prefill
+            return True
+        if self.kv_store is not None:
+            return self._prefill_paged(r)
+        return self._prefill_dense(r)
+
+    def _publish_prefix(self, r: Request) -> None:
+        """Insert the full page-aligned prompt prefix into the pool's cache
+        once its KV is materialized -- at the boundary crossing, so a long
+        tail never delays publication (and a partial handoff publishes at
+        most once: ``hit_len`` records what is already covered)."""
+        n_full = len(r.prompt) // self.page
         boundary = n_full * self.page
-        snap = cache if plen == boundary else None
-        toks = jnp.asarray([r.prompt], jnp.int32)
-        for t in range(plen, len(r.prompt)):
-            # per-token safepoint: prefill length must not stretch the
-            # bounded ping-delivery window a whole prompt long
-            self.pool.safepoint(self.engine_id)
-            _, cache, _ = self._decode(self.params, cache, toks[:, t:t + 1])
-            self.prefill_tokens += 1
-            if t + 1 == boundary:
-                snap = cache
-        self._caches[r.rid] = cache
-        if self.prefix_cache and n_full and plen < boundary:
-            self._insert_prefix(r, n_full, payload=(snap, boundary))
+        if (not self.prefix_cache or not n_full or r.hit_len >= boundary
+                or r.prefilled < boundary):
+            return
+        payload = boundary if self.kv_store is not None else (r.cache,
+                                                              boundary)
+        self._insert_prefix(r, n_full, payload=payload)
+        r.hit_len = boundary
 
-    def _admit_paged(self, r: Request, plen: int, n_full: int) -> None:
-        """Paged admission: K/V go straight into the shared physical pages.
-
-        A full-prefix hit installs NOTHING -- the shared pages enter the
-        request's block table as-is.  A miss prefills the whole prompt with
-        one dense forward and writes the result into the request's pages; a
-        partial hit replays only the remainder, token by token, through the
-        paged kernel itself (each replayed token physically attends to the
-        shared prefix pages)."""
-        from repro.serve.paged_model import paged_decode_step, prefill_kv
+    def _prefill_paged(self, r: Request) -> bool:
+        """Chunked paged prefill: one batched forward per chunk through the
+        paged kernel (prefix-shared and earlier-chunk pages gathered in
+        place), pages written incrementally via write_prefill(start=)."""
+        from repro.serve.paged_model import prefill_kv_chunked
 
         store = self.kv_store
-        # count installed bytes from the writes THIS admission performs
-        # (store.bytes_written is pool-global and races with other workers'
-        # concurrent decode appends)
-        written = 0
-        if plen == 0:
-            # one batched forward prefills the whole prompt, so the ping-
-            # delivery window here is ONE prompt forward (bounded by
-            # max_seq) rather than the dense path's one token.  A missed
-            # ping only makes EpochPOP conservative for that pass (it
-            # times out and frees nothing beyond epochs); chunked prefill
-            # (ROADMAP) will restore per-page safepoint cadence.
+        hit = r.cache_hit
+        for end, _ in prefill_kv_chunked(
+                self.params, self.cfg, store, r.all_blocks, r.prompt,
+                self.prefill_chunk, start=r.prefilled,
+                impl=self.kernel_impl):
+            written = (end - r.prefilled) * store.token_bytes
+            self.prefill_tokens += end - r.prefilled
+            r.prefilled = end
+            if hit:
+                self.kv_bytes_copied_hit += written
+            else:
+                self.kv_bytes_copied_miss += written
+            self._publish_prefix(r)
+            # per-chunk safepoint: THE bounded ping-delivery point
             self.pool.safepoint(self.engine_id)
-            k, v = prefill_kv(self.params, self.cfg, r.prompt)
+            if self._stop.is_set() and r.prefilled < len(r.prompt):
+                return False
+        return True
+
+    def _prefill_dense(self, r: Request) -> bool:
+        """Dense prefill of the uncached remainder, token by token (the
+        dense decode forward is single-token): the safepoint cadence is one
+        token, strictly tighter than the chunk bound."""
+        toks = jnp.asarray([r.prompt], jnp.int32)
+        for t in range(r.prefilled, len(r.prompt)):
             self.pool.safepoint(self.engine_id)
-            written += store.write_prefill(r.all_blocks, k, v, start=0)
-            self.prefill_tokens += len(r.prompt)
-        else:
-            for t in range(plen, len(r.prompt)):
-                self.pool.safepoint(self.engine_id)
-                paged_decode_step(self.params, self.cfg, store,
-                                  [r.all_blocks], [t], [r.prompt[t]],
-                                  impl=self.kernel_impl)
-                self.prefill_tokens += 1
-                written += store.token_bytes
-        if plen:
-            self.kv_bytes_copied_hit += written
-        else:
-            self.kv_bytes_copied_miss += written
-        boundary = n_full * self.page
-        if self.prefix_cache and n_full and plen < boundary:
-            # the pages already hold the prefix physically; the payload is
-            # just its token length -- no KV snapshot to copy around
-            self._insert_prefix(r, n_full, payload=boundary)
+            if self._stop.is_set():
+                return False
+            _, r.cache, _ = self._decode(self.params, r.cache,
+                                         toks[:, t:t + 1])
+            self.prefill_tokens += 1
+            r.prefilled = t + 1
+            self._publish_prefix(r)
+        return True
+
+    def _finalize(self, r: Request) -> None:
+        """Fail/stop-path completion: give the request's blocks back to
+        the pool under the owning engine id (retire private, release
+        shared) and release its waiter.  Best-effort -- this runs on
+        error paths where the pool itself may be the thing that failed."""
+        try:
+            if r.owner is not None:
+                self.pool.retire(r.owner, r.blocks)
+                if r.shared_blocks:
+                    self.pool.release_shared(r.owner, r.shared_blocks)
+                r.blocks, r.shared_blocks = [], []
+        except Exception:  # noqa: BLE001 -- teardown best effort
+            pass
+        r.done.set()
 
     def _insert_prefix(self, r: Request, n_full: int, payload) -> None:
         """Publish the full page-aligned prompt prefix: blocks 0..n_full-1
@@ -329,6 +350,105 @@ class EngineWorker:
             # converted blocks are now shared: release (not retire) on finish
             r.blocks = r.blocks[n_full - k:]
             r.shared_blocks = prefix_blocks
+
+    # -- lifecycle --
+
+    def start(self) -> None:
+        self._thread = threading.Thread(
+            target=self._loop, daemon=True, name=self._thread_name())
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=30)
+
+    def _thread_name(self) -> str:
+        return f"actor-{self.engine_id}"
+
+    def _loop(self) -> None:  # pragma: no cover -- subclasses override
+        raise NotImplementedError
+
+
+class EngineWorker(_PoolActor):
+    """One engine id of the pool: continuous-batching decode loop, SMR
+    reader sessions, optional prefix-cache admission.  With prefill workers
+    upstream it only ever installs ready pages; without them it runs the
+    same chunked prefill inline."""
+
+    def __init__(self, engine_id: int, cfg, params, pool: BlockPool, decode,
+                 *, max_batch: int = 8, page_size: int = 16,
+                 max_seq: int = 256, prefix_cache: bool = False,
+                 kv_store: Optional[PagedKVStore] = None,
+                 kernel_impl: Optional[str] = None,
+                 evict_policy: str = "lru", prefill_chunk: int = 16):
+        super().__init__(engine_id, cfg, params, pool, decode,
+                         page_size=page_size, max_seq=max_seq,
+                         prefix_cache=prefix_cache, kv_store=kv_store,
+                         kernel_impl=kernel_impl, evict_policy=evict_policy,
+                         prefill_chunk=prefill_chunk)
+        self.max_batch = max_batch
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.running: Dict[int, Request] = {}
+        self._caches: Dict[int, dict] = {}
+        self.steps = 0
+
+    # -- scheduler-facing API --
+
+    @property
+    def load(self) -> int:
+        """Outstanding work (queued + in flight); placement key."""
+        return self.queue.qsize() + len(self.running)
+
+    def enqueue(self, r: Request) -> None:
+        self.queue.put(r)
+        if self.error is not None:
+            # worker already failed: it will never drain the queue again
+            self.drain_queue()
+
+    def drain_queue(self) -> None:
+        while True:
+            try:
+                self.queue.get_nowait().done.set()
+            except queue.Empty:
+                return
+
+    def _thread_name(self) -> str:
+        return f"engine-{self.engine_id}"
+
+    # -- admission --
+
+    def _admit(self) -> None:
+        while len(self.running) < self.max_batch:
+            try:
+                r = self.queue.get_nowait()
+            except queue.Empty:
+                return
+            if not r.prompt:
+                # empty request: nothing to decode from; finish immediately
+                # (the kernel-level empty-row case is exercised directly in
+                # the block-table raggedness tests)
+                r.done.set()
+                continue
+            if r.owner is None:
+                # inline admission: the no-prefill-worker path (and the
+                # fallback when the prefill stage has failed)
+                if not self._admit_blocks(r):
+                    self.queue.put(r)   # out of blocks: retry later
+                    return
+            else:
+                self._adopt(r)
+            if not self._run_prefill(r):
+                # stopping mid-inline-prefill: no peer can resume a
+                # request on OUR private queue (unlike the shared prefill
+                # queue), so finalize it -- blocks back to the pool,
+                # waiter released -- instead of stranding it
+                self._finalize(r)
+                return
+            if self.kv_store is None:
+                self._caches[r.rid] = r.cache
+                r.cache = None
+            self.running[r.rid] = r
 
     # -- decode step (POP reader) --
 
@@ -411,11 +531,97 @@ class EngineWorker:
             self.drain_queue()
 
 
+class PrefillWorker(_PoolActor):
+    """Dedicated prefill stage: drains the scheduler's shared prefill queue,
+    runs chunked prefill under its OWN engine id (a first-class SMR reader:
+    its allocations, prefix refs, and safepoints are its own slots in every
+    reclaim policy's fan-out), and hands requests to decode workers through
+    the scheduler.
+
+    The step bracket is one REQUEST (the epoch announce pins for the whole
+    prefill -- deliberately the paper's delayed-reader regime), while the
+    safepoint cadence is one CHUNK: a publish-on-ping pass that lands
+    mid-prefill completes within one chunk of forward work instead of one
+    prompt.  A worker stopped mid-request re-queues it partially prefilled;
+    whoever picks it up adopts the blocks and resumes from ``r.prefilled``.
+    """
+
+    def __init__(self, engine_id: int, cfg, params, pool: BlockPool, decode,
+                 **kw):
+        super().__init__(engine_id, cfg, params, pool, decode, **kw)
+        self._scheduler = None            # bound by Scheduler.__init__
+        self.requests = 0                 # completed prefills
+
+    def bind(self, scheduler) -> None:
+        self._scheduler = scheduler
+        self.queue = scheduler.prefill_queue
+
+    def _thread_name(self) -> str:
+        return f"prefill-{self.engine_id}"
+
+    def prefill_one(self, r: Request) -> bool:
+        """Admit (or adopt) and prefill one request; returns True when its
+        prompt KV is fully materialized.  False means either allocation
+        pressure (request untouched) or a stop mid-prefill (request
+        partially prefilled, resumable) -- in both cases the caller
+        re-queues it."""
+        if r.owner is None:
+            if not self._admit_blocks(r):
+                return False
+        else:
+            self._adopt(r)
+        return self._run_prefill(r)
+
+    def _loop(self) -> None:
+        r: Optional[Request] = None
+        try:
+            while not self._stop.is_set():
+                # idle safepoint: an idle prefill reader must still service
+                # ping fan-outs promptly (its slot is part of every pass)
+                self.pool.safepoint(self.engine_id)
+                try:
+                    r = self.queue.get(timeout=0.002)
+                except queue.Empty:
+                    continue
+                self.pool.start_step(self.engine_id)
+                try:
+                    done = self.prefill_one(r)
+                finally:
+                    self.pool.end_step(self.engine_id)
+                if done:
+                    self.requests += 1
+                    self._scheduler.place_ready(r)
+                else:
+                    # allocation pressure or stop: back on the shared queue
+                    # (resumable -- a peer adopts the blocks and continues)
+                    self.queue.put(r)
+                    if not self._stop.is_set():
+                        time.sleep(0.002)   # don't spin on an empty pool
+                r = None
+        except BaseException as e:  # noqa: BLE001
+            self.error = e
+            if r is not None:
+                # the in-flight request's state is suspect (the error may
+                # have struck mid-chunk): fail fast -- blocks back to the
+                # pool so capacity is not leaked while the rest of the
+                # system keeps serving, waiter released
+                self._finalize(r)
+            # if the whole prefill stage is dead, hand the still-untouched
+            # queued requests to the decode fleet -- inline chunked prefill
+            # serves them (the promised graceful degradation; the scheduler
+            # stops routing here once no worker is alive)
+            sched = self._scheduler
+            if sched is not None and not any(
+                    pw.error is None for pw in sched.prefill_workers):
+                sched.reroute_prefill_queue()
+
+
 class Reclaimer:
     """First-class reclaimer thread: owns its own engine id in the pool
     (announced quiescent, never a reader), periodically bumps the epoch and
     runs the policy's reclamation pass -- under pressure the EpochPOP
-    fallback pings ALL worker engines concurrently, the fan-out the paper
+    fallback pings ALL worker engines concurrently (decode AND prefill
+    workers: prefill readers join the ping fan-out), the fan-out the paper
     measures.  When the free list runs low it also evicts LRU prefix-cache
     entries, whose blocks then flow retire -> SMR -> free."""
 
