@@ -16,7 +16,8 @@ from repro.core.smr.registry import make_scheme
 from repro.core.structures.harris_michael import HarrisMichaelList
 
 SCHEMES = ["NR", "HP", "HPAsym", "HE", "EBR", "NBR+",
-           "HazardPtrPOP", "HazardEraPOP", "EpochPOP"]
+           "HazardPtrPOP", "HazardEraPOP", "EpochPOP",
+           "Hyaline", "DEBRA+"]
 
 
 def run_one(scheme_name: str, *, n_readers=4, n_writers=4, list_size=4096,

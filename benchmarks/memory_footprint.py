@@ -9,12 +9,13 @@ import json
 import random
 from pathlib import Path
 
-from repro.core.sim.engine import Costs, Engine
+from repro.core.sim.engine import Costs, Engine, Neutralized
 from repro.core.smr.registry import make_scheme
 from repro.core.structures.harris_michael import HarrisMichaelList
 
 SCHEMES = ["EBR", "IBR", "HE", "HP", "HPAsym",
-           "HazardPtrPOP", "HazardEraPOP", "EpochPOP"]
+           "HazardPtrPOP", "HazardEraPOP", "EpochPOP",
+           "Hyaline", "DEBRA+"]
 
 
 def run_one(scheme_name, *, stalled=True, nthreads=6, duration=400_000.0,
@@ -39,22 +40,29 @@ def run_one(scheme_name, *, stalled=True, nthreads=6, duration=400_000.0,
 
     def stalled_reader(t):
         smr.thread_init(t)
-        yield from smr.start_op(t)
-        yield from smr.read(t, 0, lst.head)
         while t.clock < duration:
-            yield from t.work(200)     # delayed but schedulable (Assumption 1)
+            try:
+                yield from smr.start_op(t)
+                yield from smr.read(t, 0, lst.head)
+                while t.clock < duration:
+                    yield from t.work(200)   # delayed but schedulable (A.1)
+            except Neutralized:
+                continue   # DEBRA+ restarts the stalled read; it re-enters
 
     def churn(t):
         smr.thread_init(t)
         rng = random.Random(seed ^ t.tid)
         while t.clock < duration:
             k = rng.randrange(key_range)
-            yield from smr.start_op(t)
-            if rng.random() < 0.5:
-                yield from lst.insert(t, k)
-            else:
-                yield from lst.delete(t, k)
-            yield from smr.end_op(t)
+            try:
+                yield from smr.start_op(t)
+                if rng.random() < 0.5:
+                    yield from lst.insert(t, k)
+                else:
+                    yield from lst.delete(t, k)
+                yield from smr.end_op(t)
+            except Neutralized:
+                continue
 
     start = 0
     if stalled:

@@ -23,11 +23,13 @@ from typing import Dict, Type
 
 from repro.core.sim.engine import (Costs, DoubleFree, Engine, Neutralized,
                                    SimError, Stats, ThreadCtx, UseAfterFree)
+from repro.core.sim.faults import FaultPlan
 from repro.core.sim.vec import VecEngine
 
 __all__ = [
-    "BACKENDS", "Costs", "DoubleFree", "Engine", "Neutralized", "SimError",
-    "Stats", "ThreadCtx", "UseAfterFree", "VecEngine", "make_engine",
+    "BACKENDS", "Costs", "DoubleFree", "Engine", "FaultPlan", "Neutralized",
+    "SimError", "Stats", "ThreadCtx", "UseAfterFree", "VecEngine",
+    "make_engine",
 ]
 
 BACKENDS: Dict[str, Type] = {
@@ -40,8 +42,8 @@ def make_engine(nthreads: int, *, backend: str = "gen", **kw):
     """Build a simulator engine by backend name.
 
     Extra keyword arguments go to the backend constructor (``costs``,
-    ``seed``, ``preempt_prob``, ... -- plus ``quantum``/``horizon`` for
-    ``vec``).
+    ``seed``, ``preempt_prob``, ``faults`` (a :class:`FaultPlan`), ... --
+    plus ``quantum``/``horizon`` for ``vec``).
     """
     try:
         cls = BACKENDS[backend]

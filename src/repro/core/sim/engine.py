@@ -287,6 +287,7 @@ class ThreadCtx:
         self.clock = 0.0
         self.frames: List[_Frame] = []
         self.done = False
+        self.crashed = False               # killed by fault injection
         self.pending_signal_at: Optional[float] = None
         self.signal_handler: Optional[Callable[["ThreadCtx"], Generator]] = None
         self.neutralizable = False         # NBR: restartable region?
@@ -356,6 +357,7 @@ class Engine:
         seed: int = 0,
         preempt_prob: float = 0.0,
         preempt_cycles: int = 20000,
+        faults: Optional["FaultPlan"] = None,
     ):
         self.n = nthreads
         self.costs = costs or Costs()
@@ -375,6 +377,10 @@ class Engine:
         self.trace: Optional[List] = None
         # monotonically jittered per-op cost adds scheduling diversity
         self.jitter = 0.25
+        # fault injection (core/sim/faults.py); None => zero overhead
+        self.faults = faults
+        self._crash_at = faults.crash_times() if faults else {}
+        self._stall_wins = faults.stall_windows() if faults else {}
 
     # ---- setup ----
 
@@ -401,10 +407,27 @@ class Engine:
         # to cross to wherever the reader lives)
         lat = self.costs_of[target_tid].signal_latency
         at = sender.clock + lat * (1 + self.rng.random() * 0.5)
+        if self.faults is not None:
+            at += self.faults.draw_signal_delay(self.rng)
         # coalesce: POSIX keeps at most one pending instance per signo
         if tgt.pending_signal_at is None or at < tgt.pending_signal_at:
             tgt.pending_signal_at = at
         sender.stats.signals_sent += 1
+
+    def kill_thread(self, tid: int) -> None:
+        """Hard-crash a thread: frames dropped, no handler will ever run
+        again, subsequent signals to it are dropped (ESRCH).  Its store
+        buffer still drains -- the hardware's buffer outlives the thread --
+        via the global drain heap.  Its private (thread-local, unpublished)
+        state dies with it: a dead reader can never touch memory again, so
+        schemes may safely reclaim around it once they observe ``done``."""
+        t = self.threads[tid]
+        if t.done:
+            return
+        t.done = True
+        t.crashed = True
+        t.frames = []
+        t.pending_signal_at = None
 
     # ---- synchronous external driving ----
 
@@ -571,6 +594,28 @@ class Engine:
             t = self.threads[tid]
             if t.done:
                 continue
+            if self.faults is not None:
+                ca = self._crash_at.get(tid)
+                if ca is not None and t.clock >= ca:
+                    self.kill_thread(tid)
+                    self._apply_drains(t.clock)  # its buffered stores land
+                    continue
+                wins = self._stall_wins.get(tid)
+                stalled = False
+                while wins and t.clock >= wins[0][0]:
+                    t.clock += wins.pop(0)[1]    # descheduled: clock jumps
+                    stalled = True
+                if (self.faults.stall_prob
+                        and self.faults.stall_eligible(tid)
+                        and self.rng.random() < self.faults.stall_prob):
+                    t.clock += self.faults.stall_cycles * (0.5 + self.rng.random())
+                    stalled = True
+                if stalled:
+                    # while descheduled the thread handles no signals; it
+                    # re-enters the ready queue at its wake-up time
+                    heapq.heappush(heap, (t.clock, t.tid))
+                    self.time = max(self.time, t.clock)
+                    continue
             # signal delivery at instruction boundary
             if (
                 t.pending_signal_at is not None

@@ -155,7 +155,7 @@ class VecThreadCtx:
     """
 
     __slots__ = (
-        "engine", "tid", "clock", "done", "frames", "pending_signal_at",
+        "engine", "tid", "clock", "done", "crashed", "frames", "pending_signal_at",
         "signal_handler", "neutralizable", "pending_neutralize",
         "stalled_until", "stats", "local", "rng", "_budget",
         "_cells", "_state", "_cells_np", "_state_np",
@@ -169,6 +169,7 @@ class VecThreadCtx:
         self.tid = tid
         self.clock = 0.0
         self.done = False
+        self.crashed = False              # killed by fault injection
         self.frames: List[list] = []      # [generator, is_handler] pairs
         self.pending_signal_at: Optional[float] = None
         self.signal_handler: Optional[Callable] = None
@@ -423,7 +424,7 @@ class VecEngine:
     def __init__(self, nthreads: int, costs: Optional[Costs] = None,
                  seed: int = 0, preempt_prob: float = 0.0,
                  preempt_cycles: int = 20000, quantum: int = 32,
-                 horizon: float = 4096.0):
+                 horizon: float = 4096.0, faults=None):
         self.n = nthreads
         self.costs = costs or Costs()
         self.costs.validate_for(nthreads)
@@ -440,6 +441,10 @@ class VecEngine:
         #: per-op jitter is intentionally not applied (see module docstring)
         self.jitter = 0.0
         self._driving = False
+        # fault injection (core/sim/faults.py); None => zero overhead
+        self.faults = faults
+        self._crash_at = faults.crash_times() if faults else {}
+        self._stall_wins = faults.stall_windows() if faults else {}
         self.mem = VecMemory(nthreads)
         # per-thread state mirrored as numpy arrays (round granularity)
         self.clocks_np = np.zeros(nthreads, np.float64)
@@ -499,11 +504,31 @@ class VecEngine:
             return  # ESRCH
         lat = self.costs_of[target_tid].signal_latency
         at = sender.clock + lat * (1 + self.rng.random() * 0.5)
+        if self.faults is not None:
+            at += self.faults.draw_signal_delay(self.rng)
         cur = tgt.pending_signal_at
         if cur is None or at < cur:       # POSIX: coalesce per signo
             tgt.pending_signal_at = at
             self._signal_mv[target_tid] = at
         sender.stats.signals_sent += 1
+
+    def kill_thread(self, tid: int) -> None:
+        """Hard-crash a thread (same contract as Engine.kill_thread): frames
+        dropped, signals to it henceforth ESRCH-dropped, and its store
+        buffer drained -- the hardware buffer outlives the thread."""
+        t = self.threads[tid]
+        if t.done:
+            return
+        t.done = True
+        t.crashed = True
+        t.frames = []
+        t.pending_signal_at = None
+        self._signal_mv[tid] = np.inf
+        self.done_np[tid] = True
+        t._drain_own()
+        self._clocks_mv[tid] = t.clock
+        if t.clock > self.time:
+            self.time = t.clock
 
     def _signal(self, sender: VecThreadCtx, target_tid: int) -> None:
         if not self._driving:
@@ -572,6 +597,13 @@ class VecEngine:
         signal_mv = self._signal_mv
         rng = self.rng
         pp = self.preempt_prob
+        faults = self.faults
+        crash_at = self._crash_at
+        stall_wins = self._stall_wins
+        # stochastic stalls: one coin per round with the quantum-compounded
+        # probability (same equalization as the preempt coin below)
+        stall_pq = (1.0 - (1.0 - faults.stall_prob) ** q) if (
+            faults is not None and faults.stall_prob) else 0.0
         runnable = [t for t in threads if t.frames and not t.done]
         steps = 0
         while runnable:
@@ -583,6 +615,30 @@ class VecEngine:
                 if t.clock > cut:
                     i += 1
                     continue
+                if faults is not None:
+                    ca = crash_at.get(t.tid)
+                    if ca is not None and t.clock >= ca:
+                        self.kill_thread(t.tid)
+                        runnable[i] = runnable[n - 1]
+                        runnable.pop()
+                        n -= 1
+                        continue
+                    wins = stall_wins.get(t.tid)
+                    stalled = False
+                    while wins and t.clock >= wins[0][0]:
+                        t.clock += wins.pop(0)[1]
+                        stalled = True
+                    if (stall_pq and faults.stall_eligible(t.tid)
+                            and rng.random() < stall_pq):
+                        t.clock += faults.stall_cycles * (0.5 + rng.random())
+                        stalled = True
+                    if stalled:
+                        # descheduled: no ops, no signal handling this round
+                        clocks_mv[t.tid] = t.clock
+                        if t.clock > self.time:
+                            self.time = t.clock
+                        i += 1
+                        continue
                 buf = t._buf
                 if buf and buf[0][2] <= t.clock:
                     t._drain_due()

@@ -56,6 +56,14 @@ class SMRScheme:
         self.garbage_peak = 0
         self.frees = 0
         self.reclaim_calls = 0
+        # longest simulated-cycle span a reclaimer spent blocked between
+        # pinging and seeing every response (signal-based schemes update it;
+        # 0.0 for schemes that never ping).  The gauntlet reports it in
+        # seconds at the 1 GHz simulated-clock convention.
+        self.max_ping_stall = 0.0
+        # optional observer called as free_hook(t, addr) on every free --
+        # the gauntlet uses it to timestamp crash recovery
+        self.free_hook = None
 
     # ---- lifecycle ----
 
@@ -155,6 +163,8 @@ class SMRScheme:
         yield from t.free(addr)
         self.garbage -= 1
         self.frees += 1
+        if self.free_hook is not None:
+            self.free_hook(t, addr)
 
     def flush(self, t: ThreadCtx) -> Generator:
         """Best-effort final reclaim at thread exit (keeps end-state stats honest)."""

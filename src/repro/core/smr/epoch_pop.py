@@ -122,8 +122,12 @@ class EpochPOP(SMRScheme):
     def _reclaim_hp_freeable(self, t: ThreadCtx) -> Generator:
         self.pop_reclaims += 1
         snap = yield from self._collect_counters(t)
+        t0 = t.now()
         yield from self._ping_all(t)
         yield from self._wait_all_published(t, snap)
+        stall = t.now() - t0
+        if stall > self.max_ping_stall:
+            self.max_ping_stall = stall
         reserved = yield from self._collect_reservations(t)
         keep: List[int] = []
         for addr in t.local["retire"]:

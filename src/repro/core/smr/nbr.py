@@ -132,8 +132,12 @@ class NBR(SMRScheme):
         self.reclaim_calls += 1
         t.stats.reclaim_events += 1
         snap = yield from self._collect_acks(t)
+        t0 = t.now()
         yield from self._ping_all(t)
         yield from self._wait_acks(t, snap)
+        stall = t.now() - t0
+        if stall > self.max_ping_stall:
+            self.max_ping_stall = stall
         slots = [self._slot(tid, s) for tid in range(self.n)
                  for s in range(self.max_hp)]
         vals = yield from self._load_many(t, slots)

@@ -130,8 +130,12 @@ class HazardPtrPOP(SMRScheme):
         self.reclaim_calls += 1
         t.stats.reclaim_events += 1
         snap = yield from self._collect_counters(t)  # collectPublishedCounters
+        t0 = t.now()
         yield from self._ping_all(t)                 # pingAllToPublish
         yield from self._wait_all_published(t, snap) # waitForAllPublished
+        stall = t.now() - t0
+        if stall > self.max_ping_stall:
+            self.max_ping_stall = stall
         reserved = yield from self._collect_reservations(t)
         keep: List[int] = []
         for addr in t.local["retire"]:
@@ -235,8 +239,12 @@ class HazardEraPOP(SMRScheme):
         self.reclaim_calls += 1
         t.stats.reclaim_events += 1
         snap = yield from self._collect_counters(t)
+        t0 = t.now()
         yield from self._ping_all(t)
         yield from self._wait_all_published(t, snap)
+        stall = t.now() - t0
+        if stall > self.max_ping_stall:
+            self.max_ping_stall = stall
         eras = [e for e in t.local["lres"] if e != NONE_ERA]
         slots = [self._slot(tid, s) for tid in range(self.n) if tid != t.tid
                  for s in range(self.max_hp)]

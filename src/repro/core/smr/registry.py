@@ -10,10 +10,12 @@ from typing import Callable, Dict
 
 from repro.core.sim.engine import Engine
 from repro.core.smr.base import NoReclamation, SMRScheme
+from repro.core.smr.debra import DebraPlus
 from repro.core.smr.ebr import EBR, IBR
 from repro.core.smr.epoch_pop import EpochPOP
 from repro.core.smr.he import HazardEras
 from repro.core.smr.hp import HazardPointers, HazardPointersAsym, HazardPointersBroken
+from repro.core.smr.hyaline import Hyaline
 from repro.core.smr.nbr import NBR
 from repro.core.smr.pop import HazardEraPOP, HazardPtrPOP
 
@@ -29,6 +31,10 @@ SCHEMES: Dict[str, Callable[..., SMRScheme]] = {
     "HazardPtrPOP": HazardPtrPOP,
     "HazardEraPOP": HazardEraPOP,
     "EpochPOP": EpochPOP,
+    # related-work schemes (robustness gauntlet lineup, not in the paper's
+    # figures): Hyaline [1905.07903], DEBRA+ [1712.01044]
+    "Hyaline": Hyaline,
+    "DEBRA+": DebraPlus,
 }
 
 # the paper's headline comparison set (Figures 1-4)

@@ -434,6 +434,47 @@ class BlockPool:
                                           len(self._retired))
         self.policy.on_retire(engine, blocks)
 
+    def crash_engine(self, engine: int) -> int:
+        """Reader-crash teardown (the gauntlet's reader-crash fault, pool
+        edition): ``engine`` died mid-request, session and references in
+        hand.  The policy hears first -- the ESRCH analogue
+        (:meth:`ReclaimPolicy.on_engine_crash`): it drops the dead reader's
+        stale announcement/publishes so reclaim passes stop waiting on it,
+        and the sim-backed policy kills the mirrored simulated thread.  Then
+        the pool unwinds the dead engine's footprint like an aborted
+        request: the reader session is discarded (a dead reader never
+        touches again), shared-prefix request references drain through the
+        normal refcount path, and whatever blocks it still owned are
+        retired on behalf of a surviving engine -- retired, never freed
+        directly, because another engine's session may span prefix blocks
+        the dead engine published.  With no survivor the orphans go
+        straight to the retired list; nobody is left to recycle them.
+        Idempotent.  Returns the number of owned blocks recovered."""
+        if engine in self.policy.crashed:
+            return 0
+        self.policy.on_engine_crash(engine)
+        with self._lock:
+            self._session[engine] = {}
+            shared = dict(self._engine_shared[engine])
+        for b, n in shared.items():
+            self.release_shared(engine, [b] * n)
+        with self._lock:
+            orphans = sorted(self._live_local[engine])
+            self._live_local[engine].clear()
+        if not orphans:
+            return 0
+        survivor = next((i for i in range(self.n_engines)
+                         if i not in self.policy.crashed), None)
+        if survivor is None:
+            with self._lock:
+                e = self._epoch
+                self._retired.extend((b, e) for b in orphans)
+                self.stats.retired_peak = max(self.stats.retired_peak,
+                                              len(self._retired))
+            return len(orphans)
+        self.retire(survivor, orphans)
+        return len(orphans)
+
     def bump_epoch(self) -> None:
         with self._lock:
             self._epoch += 1

@@ -60,9 +60,17 @@ class ReclaimPolicy:
 
     def __init__(self) -> None:
         self.pool = None  # set by attach()
+        self.crashed: Set[int] = set()
 
     def attach(self, pool) -> None:
         self.pool = pool
+
+    def on_engine_crash(self, engine: int) -> None:
+        """A reader engine died mid-step (the gauntlet's reader-crash fault,
+        pool edition).  The policy must stop waiting on it -- the ESRCH
+        analogue -- and may recover whatever the dead reader's stale
+        reservations no longer protect.  Idempotent."""
+        self.crashed.add(engine)
 
     # -- engine step brackets / ping delivery --
 
@@ -162,6 +170,17 @@ class EpochPOPPolicy(ReclaimPolicy):
         self._publish_counter[engine] += 1
         pool.stats.publishes += 1
 
+    def on_engine_crash(self, engine: int) -> None:
+        """Dead engines leave the protocol: their stale announcement no
+        longer pins the epoch minimum, their published set is dropped (a
+        dead reader never touches again), and reclaim passes stop pinging
+        them -- otherwise every POP pass would burn the full ping timeout
+        waiting for a publish that can never come."""
+        super().on_engine_crash(engine)
+        self._announced[engine] = MAX_EPOCH
+        self._live_published[engine] = set()
+        self._ping_flags[engine].clear()
+
     # -- reclaimer side --
 
     def on_retire(self, engine: int, blocks: Sequence[int]) -> None:
@@ -211,7 +230,8 @@ class EpochPOPPolicy(ReclaimPolicy):
         with pool._lock:
             cut = pool._epoch
         snap = list(self._publish_counter)
-        others = [i for i in range(pool.n_engines) if i != engine]
+        others = [i for i in range(pool.n_engines)
+                  if i != engine and i not in self.crashed]
         t_ping = time.monotonic()
         for i in others:
             self._ping_flags[i].set()
@@ -326,15 +346,34 @@ class SimulatedSMRPolicy(ReclaimPolicy):
     # -- step brackets --
 
     def on_start_step(self, engine: int) -> None:
+        if engine in self.crashed:
+            return
         with self._mtx:
             t = self.sim.threads[engine]
             self.sim.drive(engine, self.smr.start_op(t))
 
     def on_end_step(self, engine: int) -> None:
+        if engine in self.crashed:
+            return
         with self._mtx:
             t = self.sim.threads[engine]
             self.sim.drive(engine, self.smr.end_op(t))
             self._collect_freed()
+
+    # -- crash recovery --
+
+    def on_engine_crash(self, engine: int) -> None:
+        """Kill the dead engine's mirrored simulated thread.  From here on
+        the scheme sees exactly what a real reclaimer would: pings to the
+        dead thread return ESRCH, wait loops skip it, era/epoch scans treat
+        whatever it last announced by each scheme's own crash rules (POP
+        frees past the dead thread's unpublished reservations; EBR's pinned
+        announcement leaks by design).  Retires the dead thread deferred in
+        its simulated retire list are stranded -- a bounded leak, the same
+        one a real crashed reclaimer causes."""
+        super().on_engine_crash(engine)
+        with self._mtx:
+            self.sim.kill_thread(engine)
 
     # -- ownership --
 
@@ -347,6 +386,17 @@ class SimulatedSMRPolicy(ReclaimPolicy):
                 self.sim.drive(engine, t.atomic_store(self.table + b, addr))
 
     def on_retire(self, engine: int, blocks: Sequence[int]) -> None:
+        if engine in self.crashed:
+            # a dead thread's generators cannot be driven: the first
+            # surviving engine adopts the retire (BlockPool.crash_engine
+            # routes the dead reader's last-reference blocks here); with no
+            # survivor the blocks stay on the pool's retired list -- nobody
+            # is left to free them anyway
+            live = [i for i in range(self.pool.n_engines)
+                    if i not in self.crashed]
+            if not live:
+                return
+            engine = live[0]
         with self._mtx:
             t = self.sim.threads[engine]
             for b in blocks:
@@ -358,12 +408,16 @@ class SimulatedSMRPolicy(ReclaimPolicy):
     # -- reader sessions (the batched reserve-many path) --
 
     def on_reserve(self, engine: int, session: Sequence[int]) -> None:
+        if engine in self.crashed:
+            return
         with self._mtx:
             t = self.sim.threads[engine]
             addrs = [self.table + b for b in sorted(session)]
             self.sim.drive(engine, self.smr.reserve_many(t, addrs))
 
     def on_clear_session(self, engine: int) -> None:
+        if engine in self.crashed:
+            return
         with self._mtx:
             t = self.sim.threads[engine]
             self.sim.drive(engine, self.smr.clear_many(t))
@@ -398,6 +452,8 @@ class SimulatedSMRPolicy(ReclaimPolicy):
         with self._mtx:
             before = self.pool.stats.freed
             for tid in range(self.pool.n_engines):
+                if tid in self.crashed:
+                    continue   # a dead thread's generators cannot be driven
                 t = self.sim.threads[tid]
                 self.sim.drive(tid, self.smr.flush(t))
             self._collect_freed()

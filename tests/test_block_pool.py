@@ -118,3 +118,28 @@ def test_dead_engine_keeps_pool_safe():
     freed = pool.reclaim()        # ping times out
     assert freed == 0
     assert all(b not in pool._free for b in dead_held)
+
+
+def test_crash_engine_unpins_epoch_and_recovers_blocks():
+    """Same dead-reader setup, but the crash is REPORTED (the gauntlet's
+    reader-crash fault, pool edition): the dead engine's stale announcement
+    stops pinning the epoch minimum, reclaim passes stop burning the ping
+    timeout on it, and its owned blocks come back through retirement."""
+    pool = BlockPool(32, n_engines=2, reclaim_threshold=2,
+                     pressure_factor=1, ping_timeout_s=0.2)
+    pool.start_step(1)            # engine 1 announces then dies
+    pool.allocate(1, 4)
+    for _ in range(4):
+        b = pool.allocate(0, 2)
+        pool.retire(0, b)
+    assert pool.reclaim() == 0    # undetected crash: everything pinned
+
+    t0 = time.monotonic()
+    assert pool.crash_engine(1) == 4
+    pool.reclaim(0)
+    assert time.monotonic() - t0 < 0.2, \
+        "reclaim must not wait out the ping timeout on a known-dead engine"
+    # churned garbage plus the dead reader's blocks, all recovered
+    assert pool.free_blocks == 32
+    assert pool.crash_engine(1) == 0    # idempotent
+    assert pool.check_no_leaks()

@@ -1,0 +1,147 @@
+"""Unit tests for the fault-injection layer (core/sim/faults.py).
+
+The FaultPlan contract, on BOTH backends: signal delays stretch delivery
+but never lose signals; desched windows take a thread off-CPU for the
+requested duration (and it handles queued signals at wake-up, not during);
+crashes kill a thread at the requested time with its buffered stores still
+draining; everything is deterministic at equal seeds; and a default
+(empty) plan is indistinguishable from no plan at all.
+"""
+
+import pytest
+
+from repro.core.sim import Costs, FaultPlan, make_engine
+
+BACKENDS = ["gen", "vec"]
+
+
+def _handled_at(backend, faults, seed=3):
+    """Reader loops; reclaimer pings it once.  Returns (send_t, handle_t)."""
+    eng = make_engine(2, backend=backend, seed=seed,
+                      costs=Costs(signal_latency=500), faults=faults)
+    times = {}
+
+    def handler(t):
+        times["handled"] = t.clock
+        return
+        yield
+
+    def reader(t):
+        while t.clock < 60_000:
+            yield from t.work(50)
+
+    def pinger(t):
+        yield from t.work(100)
+        times["sent"] = t.clock
+        yield from t.send_signal(0)
+
+    eng.set_signal_handler(handler)
+    eng.spawn(0, reader)
+    eng.spawn(1, pinger)
+    eng.run()
+    return times["sent"], times["handled"]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_signal_delay_stretches_delivery(backend):
+    base_sent, base_handled = _handled_at(backend, None)
+    d_sent, d_handled = _handled_at(backend, FaultPlan(signal_delay=20_000))
+    assert base_handled - base_sent < 5_000
+    # delivery still happens (the signal is delayed, not lost) but late
+    assert d_handled - d_sent >= 20_000
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_empty_plan_matches_no_plan(backend):
+    assert not FaultPlan().active
+    a = _handled_at(backend, None)
+    b = _handled_at(backend, FaultPlan())
+    assert a == b
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_desched_window_delays_thread_and_signal_handling(backend):
+    eng = make_engine(2, backend=backend, seed=1,
+                      costs=Costs(signal_latency=500),
+                      faults=FaultPlan(stalls=((0, 1_000.0, 50_000.0),)))
+    handled = []
+
+    def handler(t):
+        handled.append(t.clock)
+        return
+        yield
+
+    def reader(t):
+        while t.clock < 80_000:
+            yield from t.work(50)
+
+    def pinger(t):
+        yield from t.work(2_000)       # ping lands inside the stall window
+        yield from t.send_signal(0)
+
+    eng.set_signal_handler(handler)
+    eng.spawn(0, reader)
+    eng.spawn(1, pinger)
+    eng.run()
+    # the handler ran only after the 50k-cycle desched window ended
+    assert handled and handled[0] >= 50_000
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_crash_kills_thread_and_drains_its_buffer(backend):
+    eng = make_engine(2, backend=backend, seed=2,
+                      faults=FaultPlan(crashes=((0, 5_000.0),)))
+    cell = eng.alloc_shared(1)
+    progress = []
+
+    def victim(t):
+        yield from t.store(cell, 7)    # buffered store: must survive the crash
+        while True:
+            yield from t.work(100)
+            progress.append(t.clock)
+
+    def other(t):
+        while t.clock < 20_000:
+            yield from t.work(100)
+        # pinging a dead thread is ESRCH: silently dropped
+        yield from t.send_signal(0)
+        v = yield from t.load(cell)
+        progress.append(("saw", v))
+
+    eng.spawn(0, victim)
+    eng.spawn(1, other)
+    eng.run()
+    t0 = eng.threads[0]
+    assert t0.done and t0.crashed and not t0.frames
+    # victim made no progress past its crash time, modulo one scheduling
+    # granule (an op on gen, a quantum of ops on vec)
+    slack = 300 if backend == "gen" else 32 * 120
+    assert all(p <= 5_000 + slack
+               for p in progress if not isinstance(p, tuple))
+    # its pre-crash buffered store became visible to the survivor
+    assert ("saw", 7) in progress
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fault_injection_is_deterministic(backend):
+    plan = FaultPlan(signal_delay=1_000, signal_delay_jitter=2_000,
+                     stall_prob=0.01, stall_cycles=5_000,
+                     crashes=((2, 30_000.0),))
+
+    def run_once():
+        eng = make_engine(3, backend=backend, seed=9, faults=plan)
+        cell = eng.alloc_shared(1)
+
+        def body(t):
+            while t.clock < 60_000:
+                yield from t.faa(cell, 1)
+                yield from t.work(60)
+
+        eng.set_signal_handler(lambda t: iter(()))
+        for tid in range(3):
+            eng.spawn(tid, body)
+        eng.run()
+        return (eng.mem.cells[cell], [round(t.clock, 6) for t in eng.threads],
+                [t.crashed for t in eng.threads])
+
+    assert run_once() == run_once()

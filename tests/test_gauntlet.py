@@ -1,0 +1,90 @@
+"""Robustness-gauntlet regression tests (core/gauntlet.py).
+
+Three contracts:
+
+1. determinism -- a gauntlet row is a pure function of (scheme, backend,
+   fault mode, parameters, seed); two quick runs must produce byte-equal
+   rows on BOTH simulator backends;
+2. the headline contrast -- under a desched stall EBR's peak unreclaimed
+   garbage dwarfs every robust scheme's, and the ping stall stretches
+   with injected signal delay;
+3. crash semantics -- after a reader crash the ping/ESRCH schemes recover
+   (free post-crash retirees) while EBR/NR never do.
+"""
+
+import pytest
+
+from repro.core.gauntlet import FAULT_MODES, gauntlet_cell, run_gauntlet, \
+    summarize
+
+BACKENDS = ["gen", "vec"]
+#: a registry cross-section: leaky, ping-based, era-based, neutralizing,
+#: and the deliberately broken control
+DETERMINISM_SCHEMES = ["EBR", "HazardPtrPOP", "Hyaline", "DEBRA+",
+                       "HP-broken"]
+QUICK = dict(nthreads=4, duration=150_000.0)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_gauntlet_rows_deterministic(backend):
+    a = run_gauntlet(schemes=DETERMINISM_SCHEMES, backends=(backend,),
+                     quick=True)
+    b = run_gauntlet(schemes=DETERMINISM_SCHEMES, backends=(backend,),
+                     quick=True)
+    assert a == b, "gauntlet rows must be a pure function of the seed"
+    assert {r["fault_mode"] for r in a} == set(FAULT_MODES)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_ebr_unbounded_vs_robust_bounded_under_stall(backend):
+    stall = QUICK["duration"] * 0.5
+    ebr = gauntlet_cell("EBR", backend, "desched-stall", stall, **QUICK)
+    assert ebr["garbage_peak"] > 500, "stall should pin EBR's epoch"
+    for scheme in ("HP", "HazardPtrPOP", "EpochPOP", "Hyaline", "DEBRA+"):
+        row = gauntlet_cell(scheme, backend, "desched-stall", stall, **QUICK)
+        assert not row["uaf"]
+        assert row["garbage_peak"] < 0.2 * ebr["garbage_peak"], \
+            f"{scheme} peak {row['garbage_peak']} vs EBR {ebr['garbage_peak']}"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_ping_stall_grows_with_signal_delay(backend):
+    base = gauntlet_cell("HazardPtrPOP", backend, "signal-delay", 0.0,
+                         **QUICK)
+    slow = gauntlet_cell("HazardPtrPOP", backend, "signal-delay", 20_000.0,
+                         **QUICK)
+    assert base["max_ping_stall_s"] > 0, "POP reclaims must ping"
+    # the injected delay (20k cycles = 20us at 1 GHz) lands in the stall
+    assert slow["max_ping_stall_s"] >= base["max_ping_stall_s"] + 15e-6
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("scheme,recovers", [
+    ("EBR", False),            # dead announcement pins the epoch forever
+    ("NR", False),             # never reclaims anything by definition
+    ("HazardPtrPOP", True),    # ping returns ESRCH -> scan proceeds
+    ("DEBRA+", True),          # same, via the neutralizing fallback
+    ("Hyaline", True),         # era skip stops feeding the dead slot
+])
+def test_crash_recovery_semantics(scheme, recovers, backend):
+    crash_at = QUICK["duration"] * 0.3
+    row = gauntlet_cell(scheme, backend, "reader-crash", crash_at, **QUICK)
+    assert not row["uaf"]
+    if recovers:
+        assert row["recovery_s"] is not None, f"{scheme} never recovered"
+        assert row["recovery_s"] < 1e-3, \
+            f"{scheme} took {row['recovery_s']}s to free post-crash retires"
+    else:
+        assert row["recovery_s"] is None, \
+            f"{scheme} freed post-crash retires it should be pinning"
+
+
+def test_summarize_headlines():
+    rows = run_gauntlet(schemes=["EBR", "HazardPtrPOP"], backends=("gen",),
+                        quick=True)
+    s = summarize(rows)
+    assert s["uaf_schemes"] == []
+    contrast = s["gen/desched_peak_vs_EBR"]
+    assert contrast["EBR"] == 1.0
+    assert contrast["HazardPtrPOP"] < 0.2
+    assert "HazardPtrPOP" in s["gen/ping_stall_s_by_delay"]

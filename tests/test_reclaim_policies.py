@@ -139,6 +139,30 @@ def test_make_policy_resolution():
     assert p.scheme_name == "HazardEraPOP"
 
 
+@pytest.mark.parametrize("backend", ["gen", "vec"])
+@pytest.mark.parametrize("scheme",
+                         ["HP", "HazardPtrPOP", "EpochPOP", "Hyaline",
+                          "DEBRA+"])
+def test_crash_engine_sim_policy_survivors_keep_reclaiming(scheme, backend):
+    """A reader crashes mid-session under a sim-backed scheme: the mirrored
+    simulated thread is killed (pings return ESRCH), its blocks are retired
+    on behalf of a survivor, and the survivors keep allocating and freeing
+    -- no use-after-free, no unbounded pile-up, accounting exact."""
+    pool = BlockPool(64, n_engines=3, reclaim_threshold=4, pressure_factor=1,
+                     policy=SimulatedSMRPolicy(scheme, backend=backend))
+    pool.start_step(1)
+    session = pool.allocate(1, 3)
+    pool.reserve(1, session)
+    pool.touch(1, session)
+    pool.allocate(1, 2)              # private blocks, lost with the reader
+    assert pool.crash_engine(1) == 5
+    churn(pool, steps=40)            # survivor churns through the crash
+    pool.reclaim()
+    assert pool.stats.freed > 0, "survivors must still reclaim"
+    assert pool.crash_engine(1) == 0     # idempotent
+    assert pool.check_no_leaks()
+
+
 def test_sim_policy_reports_scheme_stats():
     """Pings/publishes from the simulated scheme surface in pool stats."""
     pool = BlockPool(32, n_engines=2, reclaim_threshold=2, pressure_factor=1,

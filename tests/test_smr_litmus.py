@@ -18,13 +18,18 @@ the bug class, and that the paper's algorithms actually close it.
 
 import pytest
 
-from repro.core.sim.engine import Costs, Engine, UseAfterFree
+from repro.core.sim import FaultPlan, make_engine
+from repro.core.sim.engine import Costs, Neutralized, UseAfterFree
 from repro.core.smr.registry import make_scheme
 
 KEY, NEXT = 0, 1
 
+pytestmark = pytest.mark.parametrize("backend", ["gen", "vec"])
 
-def _litmus(scheme_name: str, reader_delay_ops: int = 40, seed: int = 0):
+
+def _litmus(scheme_name: str, backend: str = "gen",
+            reader_delay_ops: int = 40, seed: int = 0,
+            faults: FaultPlan = None):
     """Two threads, one shared pointer cell P -> node X.
 
     T0 (reader):   r = READ(P)  [reserve X]; then a long "descheduled" stretch
@@ -34,7 +39,8 @@ def _litmus(scheme_name: str, reader_delay_ops: int = 40, seed: int = 0):
     """
     # very long drain: the broken reservation store stays invisible throughout
     costs = Costs(drain_latency=10_000_000, drain_jitter=0, signal_latency=500)
-    eng = Engine(2, costs=costs, seed=seed)
+    eng = make_engine(2, backend=backend, costs=costs, seed=seed,
+                      faults=faults)
     eng.jitter = 0.0
     smr = make_scheme(scheme_name, eng, max_hp=2, reclaim_freq=1)
     eng.set_signal_handler(smr.handler)
@@ -72,21 +78,89 @@ def _litmus(scheme_name: str, reader_delay_ops: int = 40, seed: int = 0):
     return out
 
 
-def test_hp_broken_hits_use_after_free():
+def test_hp_broken_hits_use_after_free(backend):
     with pytest.raises(UseAfterFree):
-        _litmus("HP-broken")
+        _litmus("HP-broken", backend)
+
+
+def test_hp_broken_still_trips_under_signal_delay(backend):
+    """Fault injection must not mask the fence bug: extra signal-delivery
+    latency delays pings, it does not accidentally order the broken
+    reservation store before the reclaimer's scan."""
+    with pytest.raises(UseAfterFree):
+        _litmus("HP-broken", backend, faults=FaultPlan(signal_delay=5_000.0))
 
 
 @pytest.mark.parametrize("scheme", ["HP", "HPAsym", "HazardPtrPOP", "EpochPOP"])
-def test_fenced_and_pop_schemes_survive_litmus(scheme):
-    out = _litmus(scheme)
+def test_fenced_and_pop_schemes_survive_litmus(scheme, backend):
+    out = _litmus(scheme, backend)
     assert out["val"] == 42
 
 
-def test_pop_publishes_exactly_on_ping():
+@pytest.mark.parametrize("scheme",
+                         ["HP", "HPAsym", "HazardPtrPOP", "EpochPOP", "NBR+",
+                          "Hyaline", "DEBRA+"])
+def test_crashed_reader_litmus_recover_or_never_free(scheme, backend):
+    """The reader reserves X, then CRASHES mid-hold (reservation still
+    published).  Safety contract, per scheme family: X may be freed only
+    AFTER the crash (ESRCH recovery -- the dead cannot dereference), or
+    never (a bounded leak: HP pins <= max_hp slots); and the dead reader
+    must not wedge reclamation of the nodes churned afterwards."""
+    costs = Costs(drain_latency=10_000_000, drain_jitter=0, signal_latency=500)
+    crash_at = 5_000.0
+    eng = make_engine(2, backend=backend, costs=costs, seed=0,
+                      faults=FaultPlan(crashes=((0, crash_at),)))
+    eng.jitter = 0.0
+    smr = make_scheme(scheme, eng, max_hp=2, reclaim_freq=1)
+    eng.set_signal_handler(smr.handler)
+
+    P = eng.alloc_shared(1)
+    X = eng.mem.alloc.alloc(2)
+    eng.mem.cells[P] = X
+    freed_at = {}
+    smr.free_hook = lambda t, addr: freed_at.setdefault(addr, t.now())
+
+    def reader(t):
+        smr.thread_init(t)
+        try:
+            yield from smr.start_op(t)
+            yield from smr.read(t, 0, P)
+            while True:
+                yield from t.work(100)   # holds the reservation to the crash
+        except Neutralized:
+            pass                         # neutralized before dying: also fine
+
+    def reclaimer(t):
+        smr.thread_init(t)
+        yield from smr.start_op(t)
+        yield from t.work(300)           # let the reader reserve first
+        yield from t.cas(P, X, 0)
+        yield from smr.retire(t, X)
+        yield from smr.end_op(t)
+        # churn past the crash: a dead reader must not stop the world
+        for _ in range(30):
+            yield from smr.start_op(t)
+            n = yield from smr.alloc_node(t, 1)
+            yield from smr.retire(t, n)
+            yield from smr.end_op(t)
+        yield from smr.flush(t)
+
+    eng.spawn(0, reader)
+    eng.spawn(1, reclaimer)
+    eng.run()
+    assert smr.frees > 0, "dead reader wedged reclamation entirely"
+    if X in freed_at and freed_at[X] <= crash_at:
+        # freeing before the crash is legal ONLY because the reader was
+        # neutralized first -- it restarted and relinquished the reservation
+        assert getattr(smr, "neutralizing", False), \
+            f"{scheme} freed the reservation while the reader was alive"
+        assert eng.threads[0].stats.restarts > 0
+
+
+def test_pop_publishes_exactly_on_ping(backend):
     """The reader must publish only because it was pinged (paper §3.1)."""
     costs = Costs(drain_latency=10_000_000, drain_jitter=0, signal_latency=500)
-    eng = Engine(2, costs=costs, seed=0)
+    eng = make_engine(2, backend=backend, costs=costs, seed=0)
     eng.jitter = 0.0
     smr = make_scheme("HazardPtrPOP", eng, max_hp=2, reclaim_freq=1)
     eng.set_signal_handler(smr.handler)
@@ -120,11 +194,13 @@ def test_pop_publishes_exactly_on_ping():
     assert smr.frees == 0 and smr.garbage == 1
 
 
-def test_stochastic_uaf_seeds_still_trip():
+def test_stochastic_uaf_seeds_still_trip(backend):
     """Pinned seeds from a 100-seed sweep: the full workload harness also
     exposes the fence-less race (and only for the broken scheme)."""
     from repro.core.workload import run_trial
 
+    if backend == "vec":
+        pytest.skip("seeds pinned against the gen scheduler's interleavings")
     costs = dict(costs=Costs(drain_latency=5000, drain_jitter=2500), preempt_prob=0.03)
     tripped = 0
     for seed in (19, 22, 62, 96):

@@ -19,7 +19,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core.smr.registry import PAPER_SET
 from repro.core.workload import run_trial
 
-SCHEMES = st.sampled_from(PAPER_SET)
+#: the paper's lineup plus the related-work schemes the gauntlet added
+SCHEMES = st.sampled_from(list(PAPER_SET) + ["Hyaline", "DEBRA+"])
 STRUCTS = st.sampled_from(["HML", "LL", "HMHT", "DGT"])
 
 
@@ -103,3 +104,36 @@ def test_nbr_neutralization_consistency(seed):
     snap = set(r._structure.snapshot_keys())
     exp = _expected_final(24, seed, r.per_key)
     assert snap == exp
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_debra_plus_neutralization_consistency(seed):
+    """Same restart-consistency contract for DEBRA+: a neutralized op
+    unwinds from its read phase and retries without corrupting the set,
+    and every batch either reclaims on the epoch fast path or through the
+    neutralizing fallback -- never outside the accounting."""
+    r = run_trial("HML", "DEBRA+", 5, workload="update", key_range=24,
+                  duration=200_000, seed=seed, reclaim_freq=4)
+    snap = set(r._structure.snapshot_keys())
+    exp = _expected_final(24, seed, r.per_key)
+    assert snap == exp
+    smr = r._smr
+    assert smr.epoch_reclaims + smr.ping_reclaims == smr.reclaim_calls
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), nthreads=st.integers(2, 6))
+def test_hyaline_balanced_handoff(seed, nthreads):
+    """Hyaline's reference accounting must balance: at quiescence every
+    inserted batch has been fully dereferenced and freed (no descriptor or
+    refs-cell survives), and retired == freed + final garbage."""
+    r = run_trial("HML", "Hyaline", nthreads, workload="update",
+                  key_range=24, duration=150_000, seed=seed, reclaim_freq=8)
+    smr = r._smr
+    retired = sum(t.stats.retired for t in smr.engine.threads)
+    assert smr.garbage == retired - smr.frees
+    # every batch whose references all came back was freed and unindexed;
+    # what remains is exactly the garbage still accounted to live batches
+    pending = sum(len(nodes) for nodes, _ in smr._batches.values())
+    assert pending <= smr.garbage

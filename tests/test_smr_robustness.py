@@ -2,21 +2,38 @@
 unbounded garbage under the POP schemes, while EBR -- by design -- grows
 without bound.  The stalled thread is *delayed but schedulable* (it keeps
 executing tiny ops), matching the paper's Assumption 1 that pinged threads
-publish within bounded time."""
+publish within bounded time.  Every contrast runs on BOTH simulator
+backends (gen reference / vec lockstep)."""
 
 import random
 
 import pytest
 
-from repro.core.sim.engine import Costs, Engine
+from repro.core.sim import make_engine
+from repro.core.sim.engine import Costs, Neutralized
 from repro.core.smr.registry import make_scheme
 from repro.core.structures.harris_michael import HarrisMichaelList
 
 DURATION = 500_000.0
 
+pytestmark = pytest.mark.parametrize("backend", ["gen", "vec"])
 
-def _run_with_stalled_reader(scheme_name: str, nthreads: int = 6, seed: int = 7):
-    eng = Engine(nthreads, costs=Costs(), seed=seed)
+
+def _reset_clocks(eng) -> None:
+    """Rewind a finished engine for a second spawn+run phase, on either
+    backend (vec mirrors clock/done state into numpy arrays)."""
+    for t in eng.threads:
+        t.clock, t.done, t.frames = 0.0, False, []
+    clocks_np = getattr(eng, "clocks_np", None)
+    if clocks_np is not None:
+        clocks_np[:] = 0.0
+        eng.done_np[:] = False
+    eng.time = 0.0
+
+
+def _run_with_stalled_reader(scheme_name: str, backend: str = "gen",
+                             nthreads: int = 6, seed: int = 7):
+    eng = make_engine(nthreads, backend=backend, costs=Costs(), seed=seed)
     smr = make_scheme(scheme_name, eng, max_hp=4, reclaim_freq=16, epoch_freq=4)
     eng.set_signal_handler(smr.handler)
     lst = HarrisMichaelList(eng, smr)
@@ -31,17 +48,23 @@ def _run_with_stalled_reader(scheme_name: str, nthreads: int = 6, seed: int = 7)
 
     eng.spawn(0, prefill)
     eng.run()
-    for t in eng.threads:
-        t.clock, t.done, t.frames = 0.0, False, []
+    _reset_clocks(eng)
 
     # thread 0: enters an operation, reserves a node, then stalls "forever"
-    # (but keeps being scheduled for tiny slices -- so signal handlers run)
+    # (but keeps being scheduled for tiny slices -- so signal handlers run).
+    # Under a neutralizing scheme (DEBRA+) the stall is restartable: the
+    # ping unwinds it and it re-enters, stalling again -- each unwind
+    # unpins the epoch, which is exactly that scheme's robustness story.
     def stalled(t):
         smr.thread_init(t)
-        yield from smr.start_op(t)
-        yield from smr.read(t, 0, lst.head)
         while t.clock < DURATION:
-            yield from t.work(200)
+            try:
+                yield from smr.start_op(t)
+                yield from smr.read(t, 0, lst.head)
+                while t.clock < DURATION:
+                    yield from t.work(200)
+            except Neutralized:
+                continue
         # never calls end_op within the window
 
     def churn(t):
@@ -49,12 +72,15 @@ def _run_with_stalled_reader(scheme_name: str, nthreads: int = 6, seed: int = 7)
         rng = random.Random(seed ^ t.tid)
         while t.clock < DURATION:
             k = rng.randrange(64)
-            yield from smr.start_op(t)
-            if rng.random() < 0.5:
-                yield from lst.insert(t, k)
-            else:
-                yield from lst.delete(t, k)
-            yield from smr.end_op(t)
+            try:
+                yield from smr.start_op(t)
+                if rng.random() < 0.5:
+                    yield from lst.insert(t, k)
+                else:
+                    yield from lst.delete(t, k)
+                yield from smr.end_op(t)
+            except Neutralized:
+                continue   # restartable read phase: retry the operation
 
     eng.spawn(0, stalled)
     for tid in range(1, nthreads):
@@ -64,8 +90,8 @@ def _run_with_stalled_reader(scheme_name: str, nthreads: int = 6, seed: int = 7)
     return smr, retired, nthreads
 
 
-def test_ebr_unbounded_garbage_under_stall():
-    smr, retired, _ = _run_with_stalled_reader("EBR")
+def test_ebr_unbounded_garbage_under_stall(backend):
+    smr, retired, _ = _run_with_stalled_reader("EBR", backend)
     # the stalled thread pins the minimum epoch: (almost) nothing is freed
     assert retired > 300
     assert smr.frees < 0.05 * retired
@@ -73,8 +99,8 @@ def test_ebr_unbounded_garbage_under_stall():
 
 
 @pytest.mark.parametrize("scheme", ["HazardPtrPOP", "EpochPOP", "HP", "HPAsym"])
-def test_pop_and_hp_bounded_garbage_under_stall(scheme):
-    smr, retired, n = _run_with_stalled_reader(scheme)
+def test_pop_and_hp_bounded_garbage_under_stall(scheme, backend):
+    smr, retired, n = _run_with_stalled_reader(scheme, backend)
     assert retired > 300
     # paper bound: <= N*H reserved + per-thread retire thresholds
     bound = n * smr.max_hp + n * max(smr.reclaim_freq * getattr(smr, "C", 1), smr.reclaim_freq) + 32
@@ -82,15 +108,15 @@ def test_pop_and_hp_bounded_garbage_under_stall(scheme):
     assert smr.frees > 0.5 * retired
 
 
-def test_epoch_pop_actually_uses_pop_fallback_under_stall():
-    smr, _, _ = _run_with_stalled_reader("EpochPOP")
+def test_epoch_pop_actually_uses_pop_fallback_under_stall(backend):
+    smr, _, _ = _run_with_stalled_reader("EpochPOP", backend)
     assert smr.pop_reclaims > 0, "stall should trigger the publish-on-ping fallback"
     assert smr.epoch_reclaims > 0
 
 
-def test_epoch_pop_stays_on_epoch_path_without_stall():
+def test_epoch_pop_stays_on_epoch_path_without_stall(backend):
     """No delays -> EpochPOP should reclaim via epochs and (almost) never ping."""
-    eng = Engine(4, costs=Costs(), seed=11)
+    eng = make_engine(4, backend=backend, costs=Costs(), seed=11)
     smr = make_scheme("EpochPOP", eng, max_hp=4, reclaim_freq=16, epoch_freq=4)
     eng.set_signal_handler(smr.handler)
     lst = HarrisMichaelList(eng, smr)
@@ -114,7 +140,21 @@ def test_epoch_pop_stays_on_epoch_path_without_stall():
     assert smr.pop_reclaims == 0, "no stall => the POP fallback should stay cold"
 
 
-def test_he_era_bounded_under_stall():
+def test_he_era_bounded_under_stall(backend):
     """HE/IBR: a stalled reader only pins lifespan-intersecting nodes."""
-    smr, retired, _ = _run_with_stalled_reader("HE")
+    smr, retired, _ = _run_with_stalled_reader("HE", backend)
     assert smr.frees > 0.5 * retired
+
+
+@pytest.mark.parametrize("scheme", ["Hyaline", "DEBRA+"])
+def test_related_work_schemes_bounded_under_stall(scheme, backend):
+    """The gauntlet's related-work lineup holds the same bound: Hyaline's
+    robust era skip stops handing batches to the frozen slot, DEBRA+
+    neutralizes the stalled reader outright."""
+    smr, retired, n = _run_with_stalled_reader(scheme, backend)
+    assert retired > 300
+    assert smr.frees > 0.5 * retired
+    assert smr.garbage < 0.3 * retired, \
+        f"{scheme}: stalled reader pinned {smr.garbage}/{retired}"
+    if scheme == "DEBRA+":
+        assert smr.neutralizations > 0, "the stall should force a restart"
