@@ -28,12 +28,15 @@ Two extra axes ride on the grid:
 
 * **kv_store** -- every row records its KV storage layer.  The protocol
   grid moves no KV payload (``kv_store="none"``); the ``kv-compare`` rows
-  run REAL model traffic through the serving engine twice -- ``dense``
-  (private per-request caches) vs ``paged`` (physical pages +
-  Pallas paged-attention, runtime/kv_store.py) -- and report decode
-  throughput, resident KV bytes, and **bytes-copied-per-request** split by
-  prefix-cache hit/miss (the paged path's hits must be ~0: shared pages
-  enter the block table, nothing is copied).
+  run REAL model traffic through the serving engine three times --
+  ``dense`` (private per-request caches), ``paged/host`` (physical pages
+  in numpy, re-uploaded per step), ``paged/device`` (device-resident
+  pages, in-place donated scatters; runtime/kv_store.py) -- and report
+  decode throughput, resident KV bytes, **bytes-copied-per-request**
+  split by prefix-cache hit/miss (the paged path's hits must be ~0:
+  shared pages enter the block table, nothing is copied), and
+  **bytes_h2d** (device storage must move ZERO host->device KV bytes in
+  steady-state decode; host storage pays O(pool x layers) per step).
 * **evict_policy** -- the shared-prefix comparison runs the prefix cache
   under plain LRU and under refcount-aware eviction (skip entries with
   live readers) so the two policies are directly comparable.
@@ -245,10 +248,13 @@ def run_one(scheme: str, n_engines: int, pressure: str = "high",
 def run_kv_compare(n_engines: int = 2, requests: int = 8,
                    max_new: int = 6) -> list:
     """Paged-vs-dense KV storage under REAL model traffic: same tiny model,
-    same hot page-aligned prompts, the serving engine run twice.  Reports
-    decode throughput, resident KV bytes, and bytes-copied-per-request by
-    prefix-cache outcome; asserts the paged path's acceptance criteria
-    (hits install ~0 bytes, zero use-after-free, identical tokens)."""
+    same hot page-aligned prompts, the serving engine run three times --
+    dense, paged with host-resident pages, paged with device-resident
+    pages.  Reports decode throughput, resident KV bytes, bytes-copied-
+    per-request by prefix-cache outcome, and host->device KV traffic
+    (``bytes_h2d``); asserts the acceptance criteria (hits install ~0
+    bytes, device storage moves ZERO h2d KV bytes while host storage pays
+    an upload per step, zero use-after-free, identical tokens)."""
     import jax
 
     from repro.configs.base import ArchConfig, dense_stack
@@ -264,11 +270,14 @@ def run_kv_compare(n_engines: int = 2, requests: int = 8,
     # prompt (the bytes-per-hit ~ 0 criterion is exact, not approximate)
     hot = [[1, 9, 3, 5, 2, 8, 6, 4], [7, 2, 8, 6, 4, 1, 3, 5]]
     rows, outs = [], {}
-    for mode in ("dense", "paged"):
+    cells = [("dense", None), ("paged", "host"), ("paged", "device")]
+    for mode, kv_storage in cells:
+        label = mode if kv_storage is None else f"{mode}/{kv_storage}"
         eng = ServeEngine(cfg, params, max_batch=max_batch, page_size=page,
                           num_pages=64, max_seq=max_seq,
                           n_engines=n_engines, prefix_cache=True,
-                          kv_store=mode)
+                          kv_store=mode,
+                          kv_storage=kv_storage or "device")
         eng.start()
         # warmup outside the clock: the first request pays jit compile /
         # kernel tracing, which would otherwise dominate a short run and
@@ -286,7 +295,7 @@ def run_kv_compare(n_engines: int = 2, requests: int = 8,
         # failing run still leaves its numbers on stdout (the results file
         # is only written by a run that completes)
         uaf = int(isinstance(eng.error, UseAfterFree))
-        outs[mode] = sorted(tuple(r.out) for r in reqs)
+        outs[label] = sorted(tuple(r.out) for r in reqs)
         kv = eng.kv_copy_stats()
         toks = sum(len(r.out) for r in reqs)
         if mode == "paged":
@@ -302,7 +311,8 @@ def run_kv_compare(n_engines: int = 2, requests: int = 8,
             "scheme": "EpochPOP-pool", "engines": n_engines,
             "pressure": "low", "workload": "kv-compare",
             "prefix_cache": True, "sim_backend": None, "asym": False,
-            "kv_store": mode, "evict_policy": "lru",
+            "kv_store": mode, "kv_storage": kv_storage,
+            "evict_policy": "lru",
             "requests": requests, "tokens": toks,
             "tok_per_s": toks / elapsed,
             "us_per_step": 1e6 * elapsed / max(eng.steps, 1),
@@ -311,21 +321,37 @@ def run_kv_compare(n_engines: int = 2, requests: int = 8,
             "bytes_per_miss": kv["bytes_per_miss"],
             "admitted_hit": kv["admitted_hit"],
             "admitted_miss": kv["admitted_miss"],
+            # host<->device KV traffic through the page store (None on the
+            # dense rows: private caches live wherever jit puts them)
+            "bytes_h2d": kv["bytes_h2d"],
+            "bytes_d2h": kv["bytes_d2h"],
+            "bytes_h2d_per_step": kv["bytes_h2d_per_step"],
             "prefix_hits": s.prefix_hits, "blocks_saved": s.blocks_saved,
             "peak_unreclaimed": s.retired_peak, "freed": s.freed,
             "allocated": s.allocated, "uaf": uaf, "errors": [],
         })
-        print(f"# kv-compare {mode:5s} e={n_engines} "
+        h2d = "-" if kv["bytes_h2d"] is None else str(kv["bytes_h2d"])
+        print(f"# kv-compare {label:12s} e={n_engines} "
               f"{rows[-1]['tok_per_s']:8.1f} tok/s "
               f"resident={kv_resident:>9d}B "
               f"bytes/hit={kv['bytes_per_hit']:8.0f} "
-              f"bytes/miss={kv['bytes_per_miss']:8.0f} uaf={uaf}")
-        assert eng.error is None, f"kv-compare {mode} failed: {eng.error!r}"
-    assert outs["paged"] == outs["dense"], \
-        "paged and dense decode disagree on tokens"
-    paged = rows[-1]
-    assert paged["bytes_per_hit"] == 0, \
-        f"paged cache hit copied {paged['bytes_per_hit']} bytes (want 0)"
+              f"bytes/miss={kv['bytes_per_miss']:8.0f} "
+              f"h2d={h2d:>9s}B uaf={uaf}")
+        assert eng.error is None, f"kv-compare {label} failed: {eng.error!r}"
+    assert outs["paged/host"] == outs["dense"], \
+        "paged/host and dense decode disagree on tokens"
+    assert outs["paged/device"] == outs["dense"], \
+        "paged/device and dense decode disagree on tokens"
+    by_storage = {r.get("kv_storage"): r for r in rows
+                  if r["kv_store"] == "paged"}
+    for r in by_storage.values():
+        assert r["bytes_per_hit"] == 0, \
+            f"paged cache hit copied {r['bytes_per_hit']} bytes (want 0)"
+    # the device-residency headline: resident pages move ZERO h2d KV bytes
+    # while the host reference re-uploads the pool every step
+    assert by_storage["device"]["bytes_h2d"] == 0, \
+        f"device storage uploaded {by_storage['device']['bytes_h2d']} bytes"
+    assert by_storage["host"]["bytes_h2d"] > 0
     return rows
 
 
@@ -534,14 +560,19 @@ def to_csv(rows) -> list:
                 f"peak_unreclaimed={r['peak_unreclaimed']};uaf={r['uaf']}")
             continue
         if r["workload"] == "kv-compare":
-            tag = f"serve_reclaim:kv:{r['kv_store']}:e{r['engines']}"
+            tag = f"serve_reclaim:kv:{r['kv_store']}"
+            if r.get("kv_storage"):
+                tag += f":{r['kv_storage']}"
+            tag += f":e{r['engines']}"
+            h2d = ("" if r.get("bytes_h2d") is None
+                   else f"bytes_h2d={r['bytes_h2d']};")
             out.append(
                 f"{tag},{r['us_per_step']:.2f},"
                 f"tok_per_s={r['tok_per_s']:.1f};"
                 f"kv_resident_bytes={r['kv_resident_bytes']};"
                 f"bytes_per_hit={r['bytes_per_hit']:.0f};"
                 f"bytes_per_miss={r['bytes_per_miss']:.0f};"
-                f"uaf={r['uaf']}")
+                f"{h2d}uaf={r['uaf']}")
             continue
         tag = f"serve_reclaim:{r['scheme']}:e{r['engines']}:{r['pressure']}"
         if r["workload"] == "shared-prefix":

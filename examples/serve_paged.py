@@ -18,6 +18,11 @@ feature).
 (runtime/kv_store.py) and decodes through the Pallas paged-attention kernel
 (interpret mode on CPU, compiled on TPU); a prefix-cache hit then installs
 NO copies -- the shared pages enter the request's block table directly.
+``--kv-storage`` picks where those pages live: ``device`` (default --
+resident jax arrays updated in place by donated scatters, zero
+host->device KV bytes per steady-state decode step) or ``host`` (the numpy
+reference storage, which pays an O(pool) re-upload per layer per step; the
+``bytes_h2d`` line below shows the difference).
 
 ``--prefill-workers N`` splits prefill out of the decode loop into N
 dedicated threads (each a first-class SMR reader slot) running chunked
@@ -58,6 +63,12 @@ def main():
                     help="KV storage: 'dense' (one private cache per "
                          "request) or 'paged' (physical pages in the "
                          "SMR-managed pool, Pallas paged-attention decode)")
+    ap.add_argument("--kv-storage", default="device",
+                    choices=("host", "device"),
+                    help="where the paged pages physically live: 'device' "
+                         "(resident jax arrays, in-place donated scatters) "
+                         "or 'host' (numpy reference storage, O(pool) "
+                         "re-upload per decode step)")
     ap.add_argument("--prefill-workers", type=int, default=0, metavar="N",
                     help="dedicated async-prefill threads (0 = prefill runs "
                          "inline in the decode loop, still chunked)")
@@ -78,7 +89,7 @@ def main():
     eng = ServeEngine(cfg, params, max_batch=4, page_size=8, max_seq=64,
                       pool=pool, n_engines=args.engines,
                       prefix_cache=args.prefix_cache,
-                      kv_store=args.kv_store,
+                      kv_store=args.kv_store, kv_storage=args.kv_storage,
                       prefill_workers=args.prefill_workers,
                       prefill_chunk=args.prefill_chunk)
     eng.start()
@@ -119,6 +130,11 @@ def main():
           + (f" | physical pool={eng.kv_store.nbytes} B (constant), "
              f"pages poisoned={eng.kv_store.poisons}"
              if eng.kv_store is not None else ""))
+    if kv["kv_storage"] is not None:
+        print(f"kv_storage={kv['kv_storage']}: "
+              f"bytes_h2d={kv['bytes_h2d']} "
+              f"({kv['bytes_h2d_per_step']:.0f}/step) "
+              f"bytes_d2h={kv['bytes_d2h']}")
     if eng.error is not None:
         raise SystemExit(f"ENGINE FAILED: {type(eng.error).__name__}: {eng.error}")
     print("use-after-free: none (hard error if one had occurred)")

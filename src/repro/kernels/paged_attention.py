@@ -165,3 +165,52 @@ def paged_attention_pallas(
     )(safe_table, lengths.astype(jnp.int32), qh, k_pages, v_pages)
 
     return out.reshape(B, H, Dv)
+
+
+def _scatter_kernel(blk_ref, slot_ref, vals_ref, pages_ref, out_ref):
+    # grid=(T,): the index maps already steered this block to
+    # pages[blk[t], slot[t]]; the body just lands the token's vector
+    out_ref[0, 0] = vals_ref[0]
+
+
+def paged_scatter_pallas(
+    pages: jnp.ndarray,           # (P, page, Hkv, D) physical page pool
+    block_idx: jnp.ndarray,       # (T,) destination page per token
+    slot_idx: jnp.ndarray,        # (T,) destination slot per token
+    vals: jnp.ndarray,            # (T, Hkv, D) token K (or V) vectors
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Token scatter as a Pallas kernel: write T token vectors into the
+    physical page pool at ``pages[block_idx[t], slot_idx[t]]`` -- the write
+    half of the block-table contract :func:`paged_attention_pallas` reads.
+
+    The destination indices are scalar-prefetch operands driving the output
+    BlockSpec's index map (the same trick the gather kernel uses for its
+    page DMA), and ``input_output_aliases`` makes the pool buffer the
+    output buffer: untouched pages are preserved and -- when the caller
+    donates ``pages`` under jit, as the device KV storage does -- the
+    update is genuinely in place, O(tokens) moved instead of O(pool).
+    """
+    T, Hkv, D = vals.shape
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,        # block_idx + slot_idx
+            grid=(T,),
+            in_specs=[
+                pl.BlockSpec((1, Hkv, D), lambda t, blk, slot: (t, 0, 0)),
+                pl.BlockSpec((1, 1, Hkv, D),
+                             lambda t, blk, slot: (blk[t], slot[t], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, Hkv, D),
+                                   lambda t, blk, slot: (blk[t], slot[t],
+                                                         0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(pages.shape, pages.dtype),
+        # flattened input index 3 = pages (after the 2 prefetch operands
+        # and vals): alias it straight into the output pool
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(block_idx.astype(jnp.int32), slot_idx.astype(jnp.int32),
+      vals.astype(pages.dtype), pages)

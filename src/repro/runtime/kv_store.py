@@ -17,8 +17,9 @@ see docs/ARCHITECTURE.md):
                 poison mark (``on_alloc`` listener) so the fresh owner may
                 write
     write    ── prefill (``write_prefill``) or per-token decode append
-                (``append_token``) fill slots; shared-prefix pages are
-                written ONCE by whichever engine prefilled them
+                (``append_token``/``append_tokens``) fill slots; shared-
+                prefix pages are written ONCE by whichever engine prefilled
+                them
     share    ── the block id enters the pool's prefix cache; readers gather
                 the same physical page through their block tables, no copy
     retire   ── last reference drops; the block sits on the retired list
@@ -34,21 +35,46 @@ see docs/ARCHITECTURE.md):
     recycle  ── the pool re-allocates the id; ``on_alloc`` un-poisons and
                 the new owner's writes take the page over
 
-The store is the host-side model of device HBM: numpy arrays written in
-place (token appends are single-slot scatters, never whole-cache copies),
-handed to the Pallas kernel as jnp arrays per decode step.  The *write*
-path is O(token); the current *read* path re-materializes the page arrays
-for the kernel each step, which is fine at host scale but is the thing to
-fix for real device residency -- keeping the pages as device arrays
-updated via per-slot scatters would make the layout and block-table
-contract here carry over unchanged (ROADMAP: device-resident page
-arrays).  On CPU the kernel runs in interpret mode; on TPU it compiles.
+The lifecycle above is storage-agnostic; WHERE the pages physically live is
+the ``storage`` seam:
+
+* ``storage="host"`` -- numpy arrays written in place.  Cheap to write, but
+  the *read* path must re-materialize each layer's page array for the
+  kernel every decode step: O(entire pool) host->device traffic per layer
+  per step, which on real hardware dwarfs every SMR cost this repo
+  measures.  Kept as the reference implementation and for CPU-light unit
+  tests.
+* ``storage="device"`` -- per-layer jax device arrays updated IN PLACE:
+  token writes are jitted ``.at[].set`` scatters with **buffer donation**
+  (XLA aliases the input pool buffer into the output, so no per-write pool
+  copy -- verified in the tests via ``unsafe_buffer_pointer`` stability),
+  or optionally a Pallas scatter kernel
+  (:func:`repro.kernels.paged_attention.paged_scatter_pallas`) sharing the
+  paged-attention kernel's block layout.  ``layer_pages`` hands the
+  RESIDENT arrays straight to the kernel -- zero host->device bytes per
+  step -- and poison-on-free / zero-on-alloc become device fills at the
+  same pool-listener choke points, so the UseAfterFree tripwire semantics
+  are identical on both storages.
+
+Both storages meter data movement: ``bytes_h2d`` counts host->device KV
+bytes (host storage pays O(pool * layers) per decode step at read time;
+device storage pays only for host-sourced writes such as the dense prefill
+extraction -- O(tokens written) -- and 0 during steady-state decode, where
+the K/V being scattered are already device-resident), ``bytes_d2h`` the
+reverse direction (host storage pays it per write, device storage never).
+Index vectors and fed token ids are O(batch) scalars and deliberately not
+counted: the metric is KV *payload* traffic.  On CPU the "device" is the
+CPU backend -- the arrays are jax buffers and the same code path compiles
+on TPU, which is what lets the CI interpret lane and real HBM residency
+share this one lifecycle implementation.
 """
 
 from __future__ import annotations
 
+import contextlib
+import functools
 import threading
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -69,6 +95,203 @@ def kv_layer_order(cfg) -> List[Tuple[int, int, int]]:
     return order
 
 
+# ----------------------------------------------------------------------------
+# physical storage backends (the storage="host"|"device" seam)
+# ----------------------------------------------------------------------------
+
+
+class _HostPages:
+    """Numpy page arrays: writes are host slice-assignments, reads upload
+    the whole layer to the device every call (the O(pool) tax the device
+    storage removes)."""
+
+    kind = "host"
+
+    def __init__(self, L, num_blocks, page, Hkv, hd, dtype):
+        self.k = np.zeros((L, num_blocks, page, Hkv, hd), dtype)
+        self.v = np.zeros_like(self.k)
+        self.bytes_h2d = 0
+        self.bytes_d2h = 0
+
+    def guard(self):
+        # host writes are plain numpy stores to disjoint slots; the racing
+        # serving threads never overlap blocks, so no lock is needed
+        return contextlib.nullcontext()
+
+    def scatter(self, layer, blk, slot, k, v) -> None:
+        # device-computed K/V must come down to the host first (this is the
+        # d2h half of the host storage's per-token round trip)
+        if not isinstance(k, np.ndarray):
+            self.bytes_d2h += int(k.nbytes) + int(v.nbytes)
+        k, v = np.asarray(k), np.asarray(v)
+        blk = np.asarray(blk, np.int64)
+        slot = np.asarray(slot, np.int64)
+        if layer is None:
+            self.k[:, blk, slot] = k
+            self.v[:, blk, slot] = v
+        else:
+            self.k[layer, blk, slot] = k
+            self.v[layer, blk, slot] = v
+
+    def fill(self, blocks, value: float) -> None:
+        bl = list(blocks)
+        self.k[:, bl] = value
+        self.v[:, bl] = value
+
+    def layer(self, li):
+        import jax.numpy as jnp
+
+        # the host storage's read tax: one full-layer upload per call
+        self.bytes_h2d += int(self.k[li].nbytes) + int(self.v[li].nbytes)
+        return jnp.asarray(self.k[li]), jnp.asarray(self.v[li])
+
+    def stacked(self):
+        return self.k, self.v
+
+    def sync(self) -> None:
+        pass
+
+    @property
+    def nbytes(self) -> int:
+        return self.k.nbytes + self.v.nbytes
+
+
+@functools.cache
+def _device_fns():
+    """Jitted in-place page updaters, built lazily so importing this module
+    never drags jax in.  ``donate_argnums=0`` is the load-bearing bit: XLA
+    aliases the incoming pool buffer into the output, so a scatter/fill is
+    a true in-place update of the resident pages, not an O(pool) copy."""
+    import jax
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def scatter(pages, blk, slot, vals):
+        return pages.at[blk, slot].set(vals)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def fill(pages, blk, value):
+        return pages.at[blk].set(value)
+
+    return scatter, fill
+
+
+@functools.cache
+def _pallas_scatter_fn():
+    import jax
+
+    from repro.kernels.paged_attention import paged_scatter_pallas
+
+    interpret = jax.default_backend() != "tpu"
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def scatter(pages, blk, slot, vals):
+        return paged_scatter_pallas(pages, blk, slot, vals,
+                                    interpret=interpret)
+
+    return scatter
+
+
+class _DevicePages:
+    """Device-resident page arrays: one jax array per layer, updated in
+    place by donated jitted scatters (or the Pallas scatter kernel).  Reads
+    hand back the resident arrays -- zero transfer.
+
+    Concurrency: donation invalidates the OLD buffer object, so a
+    read-modify-write race between two writers -- or a reader that fetched
+    a layer just before a writer donated it -- would raise "array deleted".
+    ``guard()`` (an RLock, also taken by every scatter/fill) is the store's
+    contract: the paged forward holds it across its
+    write -> fetch -> kernel-dispatch window per layer, which is exactly
+    the span in which a stale reference could exist."""
+
+    kind = "device"
+
+    def __init__(self, L, num_blocks, page, Hkv, hd, dtype,
+                 scatter_impl: str = "jnp"):
+        import jax.numpy as jnp
+
+        if scatter_impl not in ("jnp", "pallas"):
+            raise ValueError(f"scatter_impl must be 'jnp' or 'pallas', "
+                             f"got {scatter_impl!r}")
+        self.L = L
+        self.dtype = dtype
+        self.scatter_impl = scatter_impl
+        self.k = [jnp.zeros((num_blocks, page, Hkv, hd), dtype)
+                  for _ in range(L)]
+        self.v = [jnp.zeros((num_blocks, page, Hkv, hd), dtype)
+                  for _ in range(L)]
+        self.bytes_h2d = 0
+        self.bytes_d2h = 0
+        self._lock = threading.RLock()
+
+    def guard(self):
+        return self._lock
+
+    def _scatter_fn(self):
+        if self.scatter_impl == "pallas":
+            return _pallas_scatter_fn()
+        return _device_fns()[0]
+
+    def scatter(self, layer, blk, slot, k, v) -> None:
+        import jax.numpy as jnp
+
+        # host-sourced values (e.g. the dense prefill extraction) pay the
+        # upload -- O(tokens written), the ONLY h2d the device storage ever
+        # does; device-computed K/V (the steady-state decode path) is free
+        if isinstance(k, np.ndarray):
+            self.bytes_h2d += int(k.nbytes) + int(v.nbytes)
+        sc = self._scatter_fn()
+        bidx = jnp.asarray(np.asarray(blk, np.int32))
+        sidx = jnp.asarray(np.asarray(slot, np.int32))
+        with self._lock:
+            if layer is None:
+                for li in range(self.L):
+                    self.k[li] = sc(self.k[li], bidx, sidx,
+                                    jnp.asarray(k[li], self.dtype))
+                    self.v[li] = sc(self.v[li], bidx, sidx,
+                                    jnp.asarray(v[li], self.dtype))
+            else:
+                self.k[layer] = sc(self.k[layer], bidx, sidx,
+                                   jnp.asarray(k, self.dtype))
+                self.v[layer] = sc(self.v[layer], bidx, sidx,
+                                   jnp.asarray(v, self.dtype))
+
+    def fill(self, blocks, value: float) -> None:
+        import jax.numpy as jnp
+
+        bl = list(blocks)
+        if not bl:
+            return
+        _, fill = _device_fns()
+        bidx = jnp.asarray(np.asarray(bl, np.int32))
+        with self._lock:
+            for li in range(self.L):
+                self.k[li] = fill(self.k[li], bidx, value)
+                self.v[li] = fill(self.v[li], bidx, value)
+
+    def layer(self, li):
+        # the whole point: the resident arrays ARE the kernel operands --
+        # no jnp.asarray, no h2d, no per-step pool re-upload
+        with self._lock:
+            return self.k[li], self.v[li]
+
+    def stacked(self):
+        import jax.numpy as jnp
+
+        with self._lock:
+            return jnp.stack(self.k), jnp.stack(self.v)
+
+    def sync(self) -> None:
+        with self._lock:
+            for a in (*self.k, *self.v):
+                a.block_until_ready()
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(a.nbytes) for a in self.k) + \
+            sum(int(a.nbytes) for a in self.v)
+
+
 class PagedKVStore:
     """Physical page arrays for K and V, keyed by BlockPool block ids.
 
@@ -77,16 +300,27 @@ class PagedKVStore:
     poison/unpoison transitions are serialized by the pool's free-list lock
     (the listeners fire inside pool operations).  A small internal lock
     guards the poison set itself so ``assert_alive`` can be called from any
-    reader without racing a concurrent free.
+    reader without racing a concurrent free; device storage additionally
+    serializes its in-place buffer swaps behind :meth:`write_guard`.
+
+    ``storage`` selects the physical backend (see the module docstring):
+    ``"host"`` keeps the numpy reference implementation, ``"device"`` holds
+    the pages as jax device arrays updated in place with buffer donation.
+    ``scatter_impl`` ("jnp" | "pallas") picks the device write primitive.
     """
 
     #: freed-page fill value (finite on purpose; see :meth:`on_free`)
     POISON = 1e9
 
-    def __init__(self, cfg, num_blocks: int, page_size: int, dtype=None):
+    def __init__(self, cfg, num_blocks: int, page_size: int, dtype=None,
+                 storage: str = "host", scatter_impl: str = "jnp"):
+        if storage not in ("host", "device"):
+            raise ValueError(
+                f"storage must be 'host' or 'device', got {storage!r}")
         self.cfg = cfg
         self.num_blocks = num_blocks
         self.page = page_size
+        self.storage = storage
         self.layer_order = kv_layer_order(cfg)
         L = len(self.layer_order)
         Hkv, hd = cfg.n_kv_heads, cfg.head_dim_
@@ -96,14 +330,17 @@ class PagedKVStore:
         # holds for bf16 configs, not just f32, and resident-bytes
         # comparisons are apples to apples
         dtype = np.dtype(cfg.dtype if dtype is None else dtype)
-        self.k = np.zeros((L, num_blocks, page_size, Hkv, hd), dtype)
-        self.v = np.zeros_like(self.k)
+        if storage == "device":
+            self._st = _DevicePages(L, num_blocks, page_size, Hkv, hd, dtype,
+                                    scatter_impl=scatter_impl)
+        else:
+            self._st = _HostPages(L, num_blocks, page_size, Hkv, hd, dtype)
         self._lock = threading.Lock()
         self._poisoned: set = set()
-        # observability: the benchmark's bytes-copied axis reads these
+        # observability: the benchmark's bytes-moved axes read these
         self.bytes_written = 0          # KV bytes physically written
         self.poisons = 0                # pages poisoned (freed under the store)
-        self.token_bytes = int(2 * L * Hkv * hd * self.k.itemsize)
+        self.token_bytes = int(2 * L * Hkv * hd * dtype.itemsize)
 
     # ------------------------------------------------------------------
     # pool listener hooks (wired via BlockPool.add_block_listener)
@@ -115,12 +352,12 @@ class PagedKVStore:
         ``assert_alive`` honest for tail pages that are allocated to a
         request but not yet written; zeroing the page keeps not-yet-written
         slots inert under the kernel's masking (0 * masked-weight = 0,
-        whereas leftover poison would still be gathered by the DMA)."""
+        whereas leftover poison would still be gathered by the DMA).  On
+        device storage the zeroing is a donated device fill -- same choke
+        point, no host traffic."""
         with self._lock:
             self._poisoned.difference_update(blocks)
-            for b in blocks:
-                self.k[:, b] = 0.0
-                self.v[:, b] = 0.0
+            self._st.fill(blocks, 0.0)
 
     def on_free(self, blocks: Sequence[int]) -> None:
         """The reclaim policy proved the block safe to recycle -- or, under
@@ -131,20 +368,26 @@ class PagedKVStore:
         with a huge finite sentinel (not NaN: dead table entries redirect
         their DMA to page 0, and a NaN there would leak through the
         kernel's masked lanes as 0 * NaN) so silently-read junk shows up as
-        blown-out logits instead of plausibly stale K/V."""
+        blown-out logits instead of plausibly stale K/V.  On device storage
+        the poison is a donated device fill at this same choke point."""
         with self._lock:
-            for b in blocks:
-                self._poisoned.add(b)
-                self.k[:, b] = self.POISON
-                self.v[:, b] = self.POISON
+            self._poisoned.update(blocks)
+            self._st.fill(blocks, self.POISON)
             self.poisons += len(blocks)
 
     # ------------------------------------------------------------------
     # writes (owner-engine only)
     # ------------------------------------------------------------------
 
+    def _token_coords(self, blocks: Sequence[int], start: int, T: int):
+        """(block id, slot) per token for T consecutive positions from
+        ``start``, through the request's page list."""
+        pos = np.arange(start, start + T)
+        blk = np.asarray(blocks, np.int64)[pos // self.page]
+        return blk, pos % self.page
+
     def write_prefill(self, blocks: Sequence[int], k, v,
-                      start: int = 0, layer: int = None) -> int:
+                      start: int = 0, layer: Optional[int] = None) -> int:
         """Write a prefilled token range into ``blocks``.
 
         ``k``/``v``: ``(L, T, Hkv, hd)`` -- the per-layer post-rope K/V of T
@@ -159,53 +402,63 @@ class PagedKVStore:
         (serve/paged_model.py) writes each layer's chunk right before that
         layer's page gather, so ``start=`` is how prefill lands in the pages
         incrementally, chunk by chunk, instead of one whole-prompt write.
+        Accepts numpy or jax arrays; on device storage, device-resident
+        inputs scatter with zero host traffic.
         """
-        k = np.asarray(k)
-        v = np.asarray(v)
-        if layer is None:
-            dk, dv = self.k, self.v
-        else:
-            # promote both sides to the layer-is-leading layout -- the
-            # destinations as one-layer VIEWS, k/v as (1, T, Hkv, hd) --
-            # so a single slicing path serves both calls
-            dk, dv = self.k[layer:layer + 1], self.v[layer:layer + 1]
-            k, v = k[None], v[None]
-        T = k.shape[1]
-        page = self.page
-        pos = start
-        written = 0
-        t = 0
-        while t < T:
-            blk = blocks[pos // page]
-            slot = pos % page
-            n = min(page - slot, T - t)
-            dk[:, blk, slot:slot + n] = k[:, t:t + n]
-            dv[:, blk, slot:slot + n] = v[:, t:t + n]
-            written += 2 * k[:, t:t + n].nbytes
-            pos += n
-            t += n
+        T = k.shape[1] if layer is None else k.shape[0]
+        blk, slot = self._token_coords(blocks, start, T)
+        self._st.scatter(layer, blk, slot, k, v)
+        nl = len(self.layer_order) if layer is None else 1
+        written = int(2 * T * nl * (self.token_bytes //
+                                    (2 * len(self.layer_order))))
         self.bytes_written += written
         return written
 
     def append_token(self, block: int, slot: int, k, v,
-                     layer: int = None) -> int:
+                     layer: Optional[int] = None) -> int:
         """Write one decoded token's K/V into ``block`` at ``slot`` -- a
-        single-slot scatter, the paged path's whole per-token write cost
-        (the dense path functionally updates an entire ``(L, max_seq, ...)``
-        cache per token).  With ``layer=None`` the arrays are ``(L, Hkv,
+        single-slot scatter.  With ``layer=None`` the arrays are ``(L, Hkv,
         hd)`` and every layer is written; with a layer index they are
-        ``(Hkv, hd)`` (the decode loop appends layer by layer, right before
-        that layer's gather)."""
-        k = np.asarray(k)
+        ``(Hkv, hd)``.  Batched decode steps should prefer
+        :meth:`append_tokens` (one scatter for the whole batch row-set)."""
         if layer is None:
-            self.k[:, block, slot] = k
-            self.v[:, block, slot] = np.asarray(v)
+            self._st.scatter(None, [block], [slot], k[:, None], v[:, None])
+            written = 2 * int(np.prod(k.shape)) * self._itemsize
         else:
-            self.k[layer, block, slot] = k
-            self.v[layer, block, slot] = np.asarray(v)
-        written = 2 * k.nbytes
+            self._st.scatter(layer, [block], [slot], k[None], v[None])
+            written = 2 * int(np.prod(k.shape)) * self._itemsize
         self.bytes_written += written
         return written
+
+    def append_tokens(self, blocks: Sequence[int], slots: Sequence[int],
+                      k, v, layer: int) -> int:
+        """Batched decode append: token b of the batch lands in
+        ``blocks[b]`` slot ``slots[b]`` of ``layer``.  ``k``/``v`` are
+        ``(B, Hkv, hd)`` -- ONE scatter for the whole ragged batch, the
+        paged decode step's entire per-layer write cost."""
+        self._st.scatter(layer, blocks, slots, k, v)
+        written = 2 * int(np.prod(k.shape)) * self._itemsize
+        self.bytes_written += written
+        return written
+
+    @property
+    def _itemsize(self) -> int:
+        L, Hkv, hd = (len(self.layer_order), self.cfg.n_kv_heads,
+                      self.cfg.head_dim_)
+        return self.token_bytes // (2 * L * Hkv * hd)
+
+    def write_guard(self):
+        """Context manager the paged forward holds across its per-layer
+        write -> fetch -> kernel-dispatch window.  A no-op for host storage;
+        for device storage it is the RLock that makes in-place buffer
+        donation safe against a concurrent writer invalidating the fetched
+        page arrays (see :class:`_DevicePages`)."""
+        return self._st.guard()
+
+    def sync(self) -> None:
+        """Block until every pending device write has landed (no-op on
+        host storage) -- the benchmarks' timing fence."""
+        self._st.sync()
 
     # ------------------------------------------------------------------
     # reads (any engine holding a reservation)
@@ -214,11 +467,13 @@ class PagedKVStore:
     def assert_alive(self, engine: int, blocks: Sequence[int]) -> None:
         """The physical-page use-after-free tripwire: raise if any block a
         reader is about to gather was freed (poisoned) under it.  Mirrors
-        the simulated allocator's FREED-state check, at page granularity."""
+        the simulated allocator's FREED-state check, at page granularity.
+        One set intersection under the lock -- this sits on every gather in
+        the batch hot path, so it must not loop in Python per block."""
         with self._lock:
-            for b in blocks:
-                if b in self._poisoned:
-                    raise UseAfterFree(engine, b, "kv-gather")
+            bad = self._poisoned.intersection(blocks)
+        if bad:
+            raise UseAfterFree(engine, min(bad), "kv-gather")
 
     def gather_table(self, blocks: Sequence[Sequence[int]],
                      lengths: Sequence[int], *, min_pages: int = 1):
@@ -232,8 +487,39 @@ class PagedKVStore:
 
     def layer_pages(self, layer: int):
         """The (num_blocks, page, Hkv, hd) K and V page arrays of one
-        layer, as the kernel consumes them."""
-        return self.k[layer], self.v[layer]
+        layer, as jax arrays ready for the kernel.  Host storage uploads
+        the layer (and meters it as ``bytes_h2d``); device storage returns
+        the resident arrays -- zero bytes moved."""
+        return self._st.layer(layer)
+
+    # storage-agnostic whole-pool views (tests/debugging; device storage
+    # stacks its per-layer arrays, so treat as a snapshot, not a handle)
+
+    @property
+    def k(self):
+        return self._st.stacked()[0]
+
+    @property
+    def v(self):
+        return self._st.stacked()[1]
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+
+    @property
+    def bytes_h2d(self) -> int:
+        """Host->device KV bytes moved through the store (the benchmark's
+        bytes_h2d column): host storage pays O(pool * layers) per decode
+        step at gather time, device storage only for host-sourced writes
+        (0 in steady-state decode)."""
+        return self._st.bytes_h2d
+
+    @property
+    def bytes_d2h(self) -> int:
+        """Device->host KV bytes (host storage downloads every written
+        K/V; device storage never does)."""
+        return self._st.bytes_d2h
 
     @property
     def poisoned_blocks(self) -> int:
@@ -248,4 +534,4 @@ class PagedKVStore:
     def nbytes(self) -> int:
         """Total physical pool footprint (constant -- the paged path's peak
         KV memory regardless of request count)."""
-        return self.k.nbytes + self.v.nbytes
+        return self._st.nbytes

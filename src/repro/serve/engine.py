@@ -47,8 +47,13 @@ class ServeEngine:
     ``"paged"`` stores K/V physically in a shared
     :class:`~repro.runtime.kv_store.PagedKVStore` keyed by the pool's block
     ids and decodes through the Pallas paged-attention kernel (GQA configs;
-    see serve/paged_model.py).  Both paths run under every SMR policy, so
-    they A/B cleanly in the benchmarks.
+    see serve/paged_model.py).  ``kv_storage`` picks where the paged
+    pages physically live: ``"device"`` (the default -- "paged" means
+    HBM-paged: jax arrays updated in place by donated scatters, zero
+    host->device bytes per steady-state decode step) or ``"host"`` (the
+    numpy reference storage, which re-uploads the pool to the device every
+    step -- kept for A/B measurement and CPU-light tests).  Both paths run
+    under every SMR policy, so they A/B cleanly in the benchmarks.
 
     ``prefill_workers``/``prefill_chunk`` configure the async prefill
     pipeline: N dedicated prefill threads (each its own SMR reader slot in
@@ -68,7 +73,8 @@ class ServeEngine:
                  prefix_cache: bool = False,
                  reclaim_interval_s: float = 0.002,
                  sim_backend: str = "gen", sim_costs=None,
-                 kv_store: str = "dense", kernel_impl: Optional[str] = None,
+                 kv_store: str = "dense", kv_storage: str = "device",
+                 kernel_impl: Optional[str] = None,
                  evict_policy: str = "lru",
                  prefill_workers: int = 0, prefill_chunk: int = 16):
         self.cfg = cfg
@@ -76,6 +82,9 @@ class ServeEngine:
         if kv_store not in ("dense", "paged"):
             raise ValueError(f"kv_store must be 'dense' or 'paged', "
                              f"got {kv_store!r}")
+        if kv_storage not in ("host", "device"):
+            raise ValueError(f"kv_storage must be 'host' or 'device', "
+                             f"got {kv_storage!r}")
         if evict_policy not in ("lru", "refcount-aware"):
             # fail at construction, not asynchronously in a worker or the
             # reclaimer thread mid-run
@@ -118,7 +127,8 @@ class ServeEngine:
         if kv_store == "paged":
             from repro.serve.paged_model import check_paged_support
             check_paged_support(cfg)
-            self.kv_store = PagedKVStore(cfg, pool.num_blocks, page_size)
+            self.kv_store = PagedKVStore(cfg, pool.num_blocks, page_size,
+                                         storage=kv_storage)
             pool.add_block_listener(self.kv_store)
         # one jitted decode shared by every worker (JAX execution is
         # thread-safe; the compile cache is shared)
@@ -188,10 +198,19 @@ class ServeEngine:
         miss_b = sum(w.kv_bytes_copied_miss for w in actors)
         hits = sum(w.admitted_hit for w in actors)
         misses = sum(w.admitted_miss for w in actors)
+        st = self.kv_store
         return {
-            "kv_store": "paged" if self.kv_store is not None else "dense",
+            "kv_store": "paged" if st is not None else "dense",
+            "kv_storage": st.storage if st is not None else None,
             "admitted_hit": hits, "admitted_miss": misses,
             "bytes_hit": hit_b, "bytes_miss": miss_b,
             "bytes_per_hit": hit_b / max(hits, 1),
             "bytes_per_miss": miss_b / max(misses, 1),
+            # host<->device KV traffic through the page store: the device-
+            # residency headline (device storage: 0 h2d in steady-state
+            # decode; host storage: O(pool * layers) per step)
+            "bytes_h2d": st.bytes_h2d if st is not None else None,
+            "bytes_d2h": st.bytes_d2h if st is not None else None,
+            "bytes_h2d_per_step": (st.bytes_h2d / max(self.steps, 1)
+                                   if st is not None else None),
         }

@@ -17,11 +17,18 @@ weight-tied shared attention keep using the dense path;
 :func:`check_paged_support` rejects them up front so the failure mode is a
 clear error at engine construction, not silent wrong math.
 
-The per-layer loop runs at host level (a numpy page write sits between the
+The per-layer loop runs at host level (a page-store write sits between the
 projection math and the kernel call), so this is NOT one jitted function;
 the projection/MLP pieces are small jnp ops and the kernel runs compiled on
-TPU or in interpret mode on CPU.  That is the right trade at host scale:
-the kernel is the hot loop, and the host writes are O(token), not O(cache).
+TPU or in interpret mode on CPU.  The data plane, however, is storage-aware
+end to end: the new K/V stay jax arrays from projection to
+:meth:`PagedKVStore.append_tokens`/``write_prefill`` (under device storage
+that is a donated in-place scatter with ZERO host traffic), and
+``layer_pages`` hands the kernel the store's resident arrays -- no
+per-layer, per-step pool re-upload.  Each layer's
+write -> gather -> kernel-dispatch span runs under
+:meth:`PagedKVStore.write_guard` so a concurrent writer's buffer donation
+can never invalidate the pages mid-dispatch.
 """
 
 from __future__ import annotations
@@ -162,17 +169,18 @@ def _paged_forward(params, cfg: ArchConfig, store: PagedKVStore,
         # physical write: every row's K/V lands in its page BEFORE the
         # gather, so each new position attends to itself (and, in a prefill
         # chunk, to its chunk-mates) exactly like the dense path -- model
-        # dtype preserved end to end
-        k_np = np.asarray(k[:, 0])                           # (B, Hkv, hd)
-        v_np = np.asarray(v[:, 0])
-        write_layer(li, k_np, v_np)
-
-        k_pages, v_pages = store.layer_pages(li)
-        out = kops.paged_attention(
-            q[:, 0].astype(jnp.float32),                     # (B, H, hd)
-            jnp.asarray(k_pages), jnp.asarray(v_pages),
-            table, att_lens,
-            softcap=cfg.attn_softcap, scale=scale, impl=impl)
+        # dtype preserved end to end.  The K/V stay jax arrays: under
+        # device storage the scatter and the gather both run against the
+        # RESIDENT pages (no host round trip), and the guard keeps a
+        # concurrent writer's buffer donation from invalidating the pages
+        # between fetch and kernel dispatch.
+        with store.write_guard():
+            write_layer(li, k[:, 0], v[:, 0])                # (B, Hkv, hd)
+            k_pages, v_pages = store.layer_pages(li)
+            out = kops.paged_attention(
+                q[:, 0].astype(jnp.float32),                 # (B, H, hd)
+                k_pages, v_pages, table, att_lens,
+                softcap=cfg.attn_softcap, scale=scale, impl=impl)
         out = out.reshape(B, 1, H, hd).astype(dt)
         o = jnp.einsum("bshe,hed->bsd", out, ap["wo"])
         if cfg.post_norms:
@@ -215,19 +223,19 @@ def paged_decode_step(
     """One batched decode step for a ragged batch of requests.
 
     For each request the fed token's K/V is appended at page slot
-    ``lens[b]`` (a single scatter into the shared physical pool), then every
-    layer's attention gathers through the padded block table -- prefix-
-    shared pages are read in place, whichever engine wrote them.  Returns
-    the ``(B, vocab_padded)`` logits of the new position.
+    ``lens[b]`` (ONE batched scatter per layer into the shared physical
+    pool, not a per-request loop), then every layer's attention gathers
+    through the padded block table -- prefix-shared pages are read in
+    place, whichever engine wrote them.  Returns the ``(B, vocab_padded)``
+    logits of the new position.
     """
     page = store.page
     lens_np = np.asarray(lens, np.int64)
+    blk = [blocks[b][int(p) // page] for b, p in enumerate(lens_np)]
+    slot = [int(p) % page for p in lens_np]
 
-    def write_layer(li, k_np, v_np):
-        for b in range(len(blocks)):
-            pos = int(lens_np[b])
-            store.append_token(blocks[b][pos // page], pos % page,
-                               k_np[b], v_np[b], layer=li)
+    def write_layer(li, k_b, v_b):                           # (B, Hkv, hd)
+        store.append_tokens(blk, slot, k_b, v_b, layer=li)
 
     return _paged_forward(params, cfg, store, blocks, lens, last_tokens,
                           impl=impl, write_layer=write_layer)
@@ -263,8 +271,8 @@ def prefill_chunk_step(
     rows = [list(blocks)] * c
     lens = list(range(start, start + c))
 
-    def write_layer(li, k_np, v_np):                          # (c, Hkv, hd)
-        store.write_prefill(blocks, k_np, v_np, start=start, layer=li)
+    def write_layer(li, k_c, v_c):                            # (c, Hkv, hd)
+        store.write_prefill(blocks, k_c, v_c, start=start, layer=li)
 
     return _paged_forward(params, cfg, store, rows, lens, tokens,
                           impl=impl, write_layer=write_layer)

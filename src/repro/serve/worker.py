@@ -47,7 +47,14 @@ KV storage is selectable per engine (``kv_store``):
   (serve/paged_model.py).  A prefix hit installs *no copies at all*: the
   shared physical pages enter the request's block table directly, and the
   prefix-cache payload shrinks from a KV snapshot to just the prefilled
-  length (the block ids already live in the cache entry).
+  length (the block ids already live in the cache entry).  The pages
+  themselves are DEVICE-resident by default (``kv_storage="device"``):
+  every worker's writes are donated in-place scatters against the shared
+  device arrays and the decode gather reads them where they live, so a
+  steady-state decode step moves zero host->device KV bytes -- the
+  ``kv_storage="host"`` reference storage instead re-uploads the pool to
+  the device per layer per step (measured as ``bytes_h2d`` in
+  ``ServeEngine.kv_copy_stats``).
 """
 
 from __future__ import annotations

@@ -75,18 +75,24 @@ def test_paged_dense_token_parity(cfg):
     # (8), minimal (1), and a longer multi-page prompt
     prompts = [[1, 9, 3, 5, 2], [7, 2, 8, 6, 4, 1, 3, 5], [11],
                [int(x) for x in RNG.integers(1, cfg.vocab, 11)]]
-    outs = {}
-    for mode in ("dense", "paged"):
-        outs[mode] = _run(_engine(cfg, params, mode), prompts)
-    assert outs["paged"] == outs["dense"]
+    outs = {"dense": _run(_engine(cfg, params, "dense"), prompts)}
+    # storage must be a residency knob, not a model change: host- and
+    # device-backed pages both match the dense path token for token
+    for storage in ("host", "device"):
+        outs[storage] = _run(
+            _engine(cfg, params, "paged", kv_storage=storage), prompts)
+    assert outs["host"] == outs["dense"]
+    assert outs["device"] == outs["dense"]
 
 
+@pytest.mark.parametrize("storage", ["host", "device"])
 @pytest.mark.parametrize("dtype,atol", [("float32", 2e-4),
                                         ("bfloat16", 5e-2)])
-def test_paged_decode_logits_match_dense(dtype, atol):
-    """One decode step, same prompt: paged logits vs dense logits.  The
-    bf16 case pins the store to the MODEL dtype (pages must hold exactly
-    the values the dense cache would, not silently-upcast f32)."""
+def test_paged_decode_logits_match_dense(dtype, atol, storage):
+    """One decode step, same prompt: paged logits vs dense logits, on both
+    storages.  The bf16 case pins the store to the MODEL dtype (pages must
+    hold exactly the values the dense cache would, not silently-upcast
+    f32) -- for device storage that means resident bf16 device arrays."""
     cfg = CFG_PLAIN.scaled(dtype=dtype)
     prompt = [3, 1, 4, 1, 5, 9, 2]
     params = init_params(cfg, jax.random.PRNGKey(2))
@@ -103,7 +109,7 @@ def test_paged_decode_logits_match_dense(dtype, atol):
         mode="decode", cache=cache)
 
     # paged: dense prefill written into pages, then one paged step
-    store = PagedKVStore(cfg, num_blocks=8, page_size=PAGE)
+    store = PagedKVStore(cfg, num_blocks=8, page_size=PAGE, storage=storage)
     assert store.k.dtype == np.dtype(cfg.dtype)
     blocks = [0, 1, 2]
     k, v = prefill_kv(params, cfg, prompt)
@@ -162,12 +168,15 @@ def test_paged_prefix_hit_installs_zero_bytes():
 # ----------------------------------------------------------------------------
 
 
-def test_poison_on_unsafe_free_trips_gather():
+@pytest.mark.parametrize("storage", ["host", "device"])
+def test_poison_on_unsafe_free_trips_gather(storage):
     """A freed-then-gathered page must be a hard UseAfterFree, exactly like
-    the simulated backends' FREED-state check."""
+    the simulated backends' FREED-state check.  On device storage the
+    poison fill is itself a device op (donated ``pages.at[blocks].set``),
+    so the tripwire survives the move off the host."""
     cfg = CFG_PLAIN
     pool = BlockPool(8, n_engines=2, policy=UnsafeEagerPolicy())
-    store = PagedKVStore(cfg, pool.num_blocks, PAGE)
+    store = PagedKVStore(cfg, pool.num_blocks, PAGE, storage=storage)
     pool.add_block_listener(store)
     blocks = pool.allocate(0, 2)
     L = len(kv_layer_order(cfg))
@@ -207,10 +216,11 @@ def test_safe_policy_keeps_pages_alive_under_session():
         store.assert_alive(1, blocks)
 
 
-def test_realloc_unpoisons_and_zeroes():
+@pytest.mark.parametrize("storage", ["host", "device"])
+def test_realloc_unpoisons_and_zeroes(storage):
     cfg = CFG_PLAIN
     pool = BlockPool(2, n_engines=1, policy=UnsafeEagerPolicy())
-    store = PagedKVStore(cfg, pool.num_blocks, PAGE)
+    store = PagedKVStore(cfg, pool.num_blocks, PAGE, storage=storage)
     pool.add_block_listener(store)
     blocks = pool.allocate(0, 2)
     pool.retire(0, blocks)                     # freed + poisoned
@@ -218,6 +228,95 @@ def test_realloc_unpoisons_and_zeroes():
     assert sorted(again) == sorted(blocks)
     store.assert_alive(0, again)               # new life: no error
     assert float(np.max(np.abs(store.k))) == 0.0   # pages zeroed
+
+
+# ----------------------------------------------------------------------------
+# device residency: zero h2d in steady state, in-place scatters
+# ----------------------------------------------------------------------------
+
+
+def test_device_steady_state_decode_moves_zero_kv_bytes():
+    """The tentpole acceptance check: once a request's pages are resident,
+    decode steps upload NO KV bytes (the old host path re-uploaded the
+    whole pool per layer per step), and the per-layer page buffers are
+    updated in place (donation), not re-materialized."""
+    cfg = CFG_PLAIN
+    params = init_params(cfg, jax.random.PRNGKey(6))
+    prompt = [3, 1, 4, 1, 5]
+    store = PagedKVStore(cfg, num_blocks=8, page_size=PAGE, storage="device")
+    blocks = [0, 1, 2]                 # 12 slots: 5 prompt + 4 decode fits
+    k, v = prefill_kv(params, cfg, prompt)
+    store.write_prefill(blocks, k, v)
+    # prefill_kv returns device arrays in this process, but write_prefill
+    # may legitimately pay h2d for host-sourced prefill data elsewhere --
+    # the steady-state claim is about what happens AFTER this point
+    baseline = store.bytes_h2d
+    store.sync()
+    ptr_before = store.layer_pages(0)[0].unsafe_buffer_pointer()
+    tok, n = prompt[-1], len(prompt)
+    for _ in range(4):
+        logits = paged_decode_step(params, cfg, store, [blocks], [n], [tok],
+                                   impl="interpret")
+        tok, n = int(np.argmax(np.asarray(logits[0]))), n + 1
+    store.sync()
+    assert store.bytes_h2d == baseline, (
+        f"steady-state decode uploaded {store.bytes_h2d - baseline} KV bytes")
+    assert store.bytes_d2h == 0
+    # donated scatters reuse the same device buffer: in place, O(tokens)
+    assert store.layer_pages(0)[0].unsafe_buffer_pointer() == ptr_before
+
+
+def test_device_and_host_pages_hold_identical_values():
+    """Same writes through both storages -> bit-identical page pools (the
+    storage seam changes residency, not contents)."""
+    cfg = CFG_FANCY
+    params = init_params(cfg, jax.random.PRNGKey(7))
+    prompt = [2, 7, 1, 8, 2, 8, 1]
+    host = PagedKVStore(cfg, num_blocks=4, page_size=PAGE, storage="host")
+    dev = PagedKVStore(cfg, num_blocks=4, page_size=PAGE, storage="device")
+    k, v = prefill_kv(params, cfg, prompt)
+    for st in (host, dev):
+        st.write_prefill([0, 1], k, v)
+        paged_decode_step(params, cfg, st, [[0, 1]], [len(prompt)], [9],
+                          impl="interpret")
+    np.testing.assert_array_equal(np.asarray(host.k), np.asarray(dev.k))
+    np.testing.assert_array_equal(np.asarray(host.v), np.asarray(dev.v))
+
+
+def test_pallas_scatter_matches_jnp_scatter():
+    """The Pallas token-scatter kernel and the jnp ``.at[].set`` path write
+    identical pools (and both leave untouched pages untouched)."""
+    from repro.kernels.paged_attention import paged_scatter_pallas
+    P, page, Hkv, D, T = 6, 4, 2, 16, 7
+    pages = jnp.asarray(RNG.normal(size=(P, page, Hkv, D)), jnp.float32)
+    blk = jnp.asarray(RNG.integers(0, P, T), jnp.int32)
+    slot = jnp.asarray(RNG.integers(0, page, T), jnp.int32)
+    vals = jnp.asarray(RNG.normal(size=(T, Hkv, D)), jnp.float32)
+    want = pages.at[blk, slot].set(vals)
+    got = paged_scatter_pallas(pages, blk, slot, vals, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_host_storage_pays_per_step_upload_device_does_not():
+    """The A/B the benchmark reports: identical traffic, host storage
+    re-uploads the pool every step while device storage moves nothing."""
+    cfg = CFG_PLAIN
+    params = init_params(cfg, jax.random.PRNGKey(8))
+    prompts = [[1, 9, 3, 5, 2], [7, 2, 8]]
+    stats = {}
+    for storage in ("host", "device"):
+        eng = _engine(cfg, params, "paged", kv_storage=storage)
+        _run(eng, prompts)
+        stats[storage] = eng.kv_copy_stats()
+    assert stats["host"]["bytes_h2d"] > 0
+    assert stats["device"]["bytes_h2d"] == 0
+    assert stats["device"]["bytes_h2d_per_step"] == 0
+
+
+def test_engine_rejects_bad_kv_storage():
+    params = init_params(CFG_PLAIN, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="kv_storage"):
+        ServeEngine(CFG_PLAIN, params, kv_store="paged", kv_storage="hbm")
 
 
 # ----------------------------------------------------------------------------
