@@ -61,8 +61,18 @@ engine readers live on a "remote socket" (4x ping/signal delivery
 latency, 2x memory latency via ``Costs.asymmetric``), the regime where
 publish-on-ping's contrast with fence-per-read is widest.
 
+Every row that runs the real serving engine (kv-compare, prefill-
+interference) additionally carries per-request latency distributions from
+the obs registry -- ``ttft_{p50,p99,p999,max}_s`` and
+``tok_latency_*_s`` -- and every row with an SMR pool carries
+``ping_stall_*_s`` / ``reclaim_pass_*_s`` percentiles sourced from the
+same locked recorder that feeds ``stats.max_ping_stall_s`` (one write
+path, so the scalar and the histogram max cannot diverge).
+
     PYTHONPATH=src python benchmarks/serve_reclaim.py [--quick] [--engines 2]
     PYTHONPATH=src python benchmarks/serve_reclaim.py --sim-backend vec
+    PYTHONPATH=src python benchmarks/serve_reclaim.py --quick --metrics \\
+        --trace /tmp/serve_reclaim_trace.json
 
 CSV schema (matched to benchmarks/run.py): ``name,us_per_call,derived``
 where name = serve_reclaim:<scheme>:e<engines>:<pressure>
@@ -81,9 +91,13 @@ import time
 from pathlib import Path
 
 from repro.core.sim.engine import Costs, UseAfterFree
+from repro.obs import Tracer
 from repro.runtime.block_pool import BlockPool, OutOfBlocks
 from repro.runtime.reclaim import is_simulated, make_policy
 from repro.serve.worker import Reclaimer
+
+#: histogram fields every latency column carries (ttft_p99_s style)
+LAT_FIELDS = ("p50", "p99", "p999", "max")
 
 # native EpochPOP pool + a representative slice of the registry
 DEFAULT_SCHEMES = ("EpochPOP-pool", "HP", "HE", "EBR", "NBR+",
@@ -100,7 +114,8 @@ def run_one(scheme: str, n_engines: int, pressure: str = "high",
             workload: str = "private", prefix_cache: bool = False,
             duration: float = 0.5, blocks_per_req: int = 4,
             window: int = 3, seed: int = 0, sim_backend: str = "gen",
-            asym: bool = False, evict_policy: str = "lru") -> dict:
+            asym: bool = False, evict_policy: str = "lru",
+            tracer: "Tracer | None" = None) -> dict:
     """One grid cell: n_engines real reader threads + 1 reclaimer thread."""
     num_blocks = PRESSURE[pressure] * n_engines
     # the native pool policy never touches the simulator; don't stamp its
@@ -122,6 +137,8 @@ def run_one(scheme: str, n_engines: int, pressure: str = "high",
                      pressure_factor=2,
                      policy=make_policy(scheme, backend=sim_backend,
                                         costs=costs))
+    if tracer is not None:
+        pool.attach_tracer(tracer)
     reclaimer = Reclaimer(pool, engine_id=n_engines, interval_s=0.001,
                           evict_policy=evict_policy)
     stop = threading.Event()
@@ -241,12 +258,20 @@ def run_one(scheme: str, n_engines: int, pressure: str = "high",
         "prefix_hits": s.prefix_hits, "prefix_evictions": s.prefix_evictions,
         "pings": s.pings, "publishes": s.publishes,
         "reclaimer_passes": reclaimer.passes,
+        # publish-on-ping delivery window, as a distribution: sourced from
+        # the pool's MetricsRegistry (record_locked on every pass), whose
+        # merged max is exactly stats.max_ping_stall_s -- one recorder, no
+        # split-brain scalar
+        "max_ping_stall_s": s.max_ping_stall_s,
+        **pool.metrics.flat(["ping_stall_s", "reclaim_pass_s"],
+                            fields=LAT_FIELDS),
         "uaf": uaf[0], "errors": errors[:3],
     }
 
 
 def run_kv_compare(n_engines: int = 2, requests: int = 8,
-                   max_new: int = 6) -> list:
+                   max_new: int = 6,
+                   tracer: "Tracer | None" = None) -> list:
     """Paged-vs-dense KV storage under REAL model traffic: same tiny model,
     same hot page-aligned prompts, the serving engine run three times --
     dense, paged with host-resident pages, paged with device-resident
@@ -277,13 +302,17 @@ def run_kv_compare(n_engines: int = 2, requests: int = 8,
                           num_pages=64, max_seq=max_seq,
                           n_engines=n_engines, prefix_cache=True,
                           kv_store=mode,
-                          kv_storage=kv_storage or "device")
+                          kv_storage=kv_storage or "device",
+                          trace=tracer)
         eng.start()
         # warmup outside the clock: the first request pays jit compile /
         # kernel tracing, which would otherwise dominate a short run and
         # make tok_per_s a startup benchmark (a prompt OUTSIDE the hot set,
         # so the timed hit/miss mix is unchanged)
         eng.submit([9, 9, 9, 9], max_new=1).done.wait(timeout=600)
+        # the warmup TTFT is all jit compile: drop it so the reported
+        # latency tail is the steady-state distribution
+        eng.metrics.reset()
         t0 = time.perf_counter()
         reqs = [eng.submit(hot[i % len(hot)], max_new=max_new)
                 for i in range(requests)]
@@ -307,6 +336,12 @@ def run_kv_compare(n_engines: int = 2, requests: int = 8,
                             if w._dense_cache_bytes), 0)
             kv_resident = per_req * max_batch * n_engines
         s = eng.pool.stats
+        # per-request latency distributions from the engine registry (TTFT,
+        # inter-token gap) and the pool registry (ping stall)
+        lat = eng.metrics.flat(["ttft_s", "tok_latency_s"],
+                               fields=LAT_FIELDS)
+        lat.update(eng.pool.metrics.flat(["ping_stall_s"],
+                                         fields=LAT_FIELDS))
         rows.append({
             "scheme": "EpochPOP-pool", "engines": n_engines,
             "pressure": "low", "workload": "kv-compare",
@@ -328,11 +363,15 @@ def run_kv_compare(n_engines: int = 2, requests: int = 8,
             "bytes_h2d_per_step": kv["bytes_h2d_per_step"],
             "prefix_hits": s.prefix_hits, "blocks_saved": s.blocks_saved,
             "peak_unreclaimed": s.retired_peak, "freed": s.freed,
-            "allocated": s.allocated, "uaf": uaf, "errors": [],
+            "allocated": s.allocated, **lat, "uaf": uaf, "errors": [],
         })
         h2d = "-" if kv["bytes_h2d"] is None else str(kv["bytes_h2d"])
         print(f"# kv-compare {label:12s} e={n_engines} "
               f"{rows[-1]['tok_per_s']:8.1f} tok/s "
+              f"ttft p50/p99 {lat['ttft_p50_s']*1e3:6.1f}/"
+              f"{lat['ttft_p99_s']*1e3:6.1f}ms "
+              f"tok p50/p99 {lat['tok_latency_p50_s']*1e3:6.1f}/"
+              f"{lat['tok_latency_p99_s']*1e3:6.1f}ms "
               f"resident={kv_resident:>9d}B "
               f"bytes/hit={kv['bytes_per_hit']:8.0f} "
               f"bytes/miss={kv['bytes_per_miss']:8.0f} "
@@ -358,8 +397,8 @@ def run_kv_compare(n_engines: int = 2, requests: int = 8,
 def run_prefill_interference(schemes=("EpochPOP-pool", "EpochPOP"),
                              chunks=(4, 16), prefill_workers: int = 2,
                              n_short: int = 4, long_len: int = 48,
-                             max_new: int = 4,
-                             sim_backend: str = "vec") -> list:
+                             max_new: int = 4, sim_backend: str = "vec",
+                             tracer: "Tracer | None" = None) -> list:
     """Long-prompt + short-decode mix through REAL paged model traffic:
     inline vs async prefill at each chunk size.  The short requests'
     decode tok/s is the interference metric (inline prefill stalls them
@@ -414,10 +453,12 @@ def run_prefill_interference(schemes=("EpochPOP-pool", "EpochPOP"),
                 eng = ServeEngine(cfg, params, max_batch=max_batch,
                                   page_size=page, max_seq=max_seq,
                                   pool=pool, n_engines=1, kv_store="paged",
-                                  prefill_workers=n_pw, prefill_chunk=chunk)
+                                  prefill_workers=n_pw, prefill_chunk=chunk,
+                                  trace=tracer)
                 eng.start()
                 # warmup outside the clock (kernel tracing / first dispatch)
                 eng.submit([9, 9, 9], max_new=1).done.wait(timeout=600)
+                eng.metrics.reset()    # compile-time TTFT out of the tail
                 t0 = time.perf_counter()
                 long_r = eng.submit(long_prompt, max_new=max_new)
                 shorts = [eng.submit(short[:-1] + [5 + i], max_new=max_new)
@@ -444,6 +485,10 @@ def run_prefill_interference(schemes=("EpochPOP-pool", "EpochPOP"),
                     "t_short_s": t_short, "t_all_s": t_all,
                     "prefill_tokens": eng.prefill_tokens,
                     "max_ping_stall_s": s.max_ping_stall_s,
+                    **eng.metrics.flat(["ttft_s", "tok_latency_s"],
+                                       fields=LAT_FIELDS),
+                    **pool.metrics.flat(["ping_stall_s"],
+                                        fields=LAT_FIELDS),
                     "us_per_step": 1e6 * t_all / max(eng.steps, 1),
                     "peak_unreclaimed": s.retired_peak, "freed": s.freed,
                     "allocated": s.allocated, "pings": s.pings,
@@ -454,8 +499,10 @@ def run_prefill_interference(schemes=("EpochPOP-pool", "EpochPOP"),
                 print(f"# prefill-interference {scheme:14s} {mode:6s} "
                       f"c={chunk:2d} short {row['tok_per_s_short']:6.1f} "
                       f"tok/s (t_short={t_short:5.2f}s all={t_all:5.2f}s) "
-                      f"max_ping_stall={s.max_ping_stall_s*1e3:7.1f}ms "
-                      f"uaf={uaf}")
+                      f"ttft p99={row['ttft_p99_s']:5.2f}s "
+                      f"ping_stall p99/max="
+                      f"{row['ping_stall_p99_s']*1e3:6.1f}/"
+                      f"{s.max_ping_stall_s*1e3:6.1f}ms uaf={uaf}")
                 assert eng.error is None, \
                     f"prefill-interference {scheme}/{mode} failed: " \
                     f"{eng.error!r}"
@@ -472,7 +519,7 @@ def run_prefill_interference(schemes=("EpochPOP-pool", "EpochPOP"),
 def run_grid(schemes=DEFAULT_SCHEMES, engines=(1, 2, 4),
              pressures=("low", "high"), duration: float = 0.5,
              shared: bool = True, sim_backend: str = "gen",
-             asym: bool = True) -> list:
+             asym: bool = True, tracer: "Tracer | None" = None) -> list:
     """scheme x engines x pressure on the private workload, plus (when
     ``shared``) a cache-on/cache-off shared-prefix pair per scheme -- the
     allocation-reduction comparison from the acceptance criteria -- plus
@@ -483,7 +530,7 @@ def run_grid(schemes=DEFAULT_SCHEMES, engines=(1, 2, 4),
         for n in engines:
             for p in pressures:
                 r = run_one(scheme, n, p, duration=duration,
-                            sim_backend=sim_backend)
+                            sim_backend=sim_backend, tracer=tracer)
                 rows.append(r)
                 print(f"# {scheme:14s} e={n} {p:4s} "
                       f"{r['us_per_step']:9.1f} us/step "
@@ -555,6 +602,7 @@ def to_csv(rows) -> list:
             out.append(
                 f"{tag},{r['us_per_step']:.2f},"
                 f"tok_per_s_short={r['tok_per_s_short']:.1f};"
+                f"ttft_p99_ms={r['ttft_p99_s']*1e3:.1f};"
                 f"max_ping_stall_ms={r['max_ping_stall_s']*1e3:.1f};"
                 f"prefill_tokens={r['prefill_tokens']};"
                 f"peak_unreclaimed={r['peak_unreclaimed']};uaf={r['uaf']}")
@@ -569,6 +617,8 @@ def to_csv(rows) -> list:
             out.append(
                 f"{tag},{r['us_per_step']:.2f},"
                 f"tok_per_s={r['tok_per_s']:.1f};"
+                f"ttft_p99_ms={r['ttft_p99_s']*1e3:.1f};"
+                f"tok_latency_p99_ms={r['tok_latency_p99_s']*1e3:.1f};"
                 f"kv_resident_bytes={r['kv_resident_bytes']};"
                 f"bytes_per_hit={r['bytes_per_hit']:.0f};"
                 f"bytes_per_miss={r['bytes_per_miss']:.0f};"
@@ -617,29 +667,57 @@ def main():
                     help="restrict the prefill-interference chunk sweep to "
                          "a single chunk size (default: sweep 4 and 16)")
     ap.add_argument("--out", default="results/serve_reclaim.json")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Perfetto-loadable trace of every cell "
+                         "(request lifecycle + SMR ping spans) to this path")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the per-row latency/stall percentile "
+                         "columns as a summary table")
     args = ap.parse_args()
+    tracer = Tracer() if args.trace else None
     engines = (args.engines,) if args.engines else None
     chunks = (args.prefill_chunk,) if args.prefill_chunk else (4, 16)
     if args.quick:
         rows = run_grid(schemes=QUICK_SCHEMES, engines=engines or (1, 2),
                         pressures=("high",),
                         duration=args.duration or 0.2,
-                        sim_backend=args.sim_backend, asym=False)
+                        sim_backend=args.sim_backend, asym=False,
+                        tracer=tracer)
         if not args.skip_kv:
             rows += run_kv_compare(n_engines=min(engines or (2,)),
-                                   requests=4, max_new=4)
+                                   requests=4, max_new=4, tracer=tracer)
     else:
         # the vec backend is what makes the 8-engine column affordable
         full = (1, 2, 4, 8) if args.sim_backend == "vec" else (1, 2, 4)
         rows = run_grid(engines=engines or full,
                         duration=args.duration or 0.5,
-                        sim_backend=args.sim_backend)
+                        sim_backend=args.sim_backend, tracer=tracer)
         if not args.skip_kv:
-            rows += run_kv_compare(n_engines=2)
+            rows += run_kv_compare(n_engines=2, tracer=tracer)
         if not args.skip_prefill:
             rows += run_prefill_interference(
                 chunks=chunks, prefill_workers=args.prefill_workers,
-                sim_backend=args.sim_backend)
+                sim_backend=args.sim_backend, tracer=tracer)
+    if tracer is not None:
+        obj = tracer.export(args.trace)
+        print(f"trace: {len(obj['traceEvents'])} events -> {args.trace}")
+    if args.metrics:
+        for r in rows:
+            cols = ", ".join(f"{k}={r[k]*1e3:.2f}ms" for k in
+                             ("ttft_p50_s", "ttft_p99_s",
+                              "tok_latency_p50_s", "tok_latency_p99_s",
+                              "ping_stall_p50_s", "ping_stall_p99_s",
+                              "ping_stall_max_s") if k in r)
+            if cols:
+                name = f"{r['scheme']}:{r['workload']}"
+                if r.get("prefill_mode"):
+                    name += f":{r['prefill_mode']}:c{r['prefill_chunk']}"
+                elif r["workload"] == "kv-compare":
+                    name += ":" + (r["kv_store"] if not r.get("kv_storage")
+                                   else f"{r['kv_store']}/{r['kv_storage']}")
+                else:
+                    name += f":e{r['engines']}:{r['pressure']}"
+                print(f"# metrics {name:44s} {cols}")
     # regenerate (not append): the file is the CURRENT grid, superseded
     # rows from earlier runs are dropped wholesale
     Path(args.out).parent.mkdir(parents=True, exist_ok=True)

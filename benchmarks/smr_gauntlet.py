@@ -12,6 +12,12 @@ quick grid twice and asserts identical rows on both backends.
 
     python benchmarks/smr_gauntlet.py --quick
     python benchmarks/smr_gauntlet.py --sim-backend vec --scheme EBR --scheme EpochPOP
+    python benchmarks/smr_gauntlet.py --quick --trace /tmp/gauntlet.json
+
+``--trace`` additionally writes a Chrome-trace/Perfetto JSON of every
+ping->acks window in the simulated-cycle clock domain (one track per
+scheme x simulated thread); ``--metrics`` prints the per-cell stall
+percentile columns that already live in the row JSON.
 """
 
 from __future__ import annotations
@@ -20,6 +26,7 @@ import argparse
 import json
 
 from repro.core.gauntlet import run_gauntlet, summarize
+from repro.obs import Tracer
 
 
 def main():
@@ -34,13 +41,30 @@ def main():
                          "the full registry)")
     ap.add_argument("--seed", type=int, default=11)
     ap.add_argument("--out", default="results/smr_gauntlet.json")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Perfetto-loadable trace of every ping "
+                         "pass (simulated-cycle clock domain)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print per-cell ping-stall percentiles")
     args = ap.parse_args()
 
+    tracer = Tracer() if args.trace else None
     backends = ("gen", "vec") if args.sim_backend == "both" \
         else (args.sim_backend,)
     rows = run_gauntlet(schemes=args.scheme, backends=backends,
                         quick=args.quick, seed=args.seed, out=args.out,
-                        verbose=True)
+                        verbose=True, tracer=tracer)
+    if tracer is not None:
+        obj = tracer.export(args.trace)
+        print(f"trace: {len(obj['traceEvents'])} events -> {args.trace}")
+    if args.metrics:
+        for r in rows:
+            if r["ping_stalls"]:
+                print(f"{r['sim_backend']:3s} {r['scheme']:14s} "
+                      f"{r['fault_mode']:13s} p={r['param']:9.0f} "
+                      f"stalls={r['ping_stalls']:5d} "
+                      f"p99={r['ping_stall_p99_s'] * 1e6:9.1f}us "
+                      f"max={r['max_ping_stall_s'] * 1e6:9.1f}us")
     print(json.dumps(summarize(rows), indent=1))
     unexpected = sorted({r["scheme"] for r in rows
                          if r["uaf"] and r["scheme"] != "HP-broken"})

@@ -13,6 +13,8 @@ feature).
     PYTHONPATH=src python examples/serve_paged.py --smr EpochPOP --sim-backend vec
     PYTHONPATH=src python examples/serve_paged.py --kv-store paged \
         --prefill-workers 2 --prefill-chunk 16   # async chunked prefill stage
+    PYTHONPATH=src python examples/serve_paged.py --engines 2 \
+        --trace /tmp/serve.json --metrics        # Perfetto trace + histograms
 
 ``--kv-store paged`` stores K/V physically in the POP-managed block pool
 (runtime/kv_store.py) and decodes through the Pallas paged-attention kernel
@@ -38,6 +40,7 @@ import jax
 
 from repro.configs.base import ArchConfig, dense_stack
 from repro.models.model import init_params
+from repro.obs import Tracer
 from repro.runtime.block_pool import BlockPool
 from repro.runtime.reclaim import make_policy, supported_schemes
 from repro.serve.engine import ServeEngine
@@ -77,21 +80,40 @@ def main():
                          "safepoint between chunks bounds the ping-delivery "
                          "window during misses")
     ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome-trace/Perfetto JSON of the run: "
+                         "request lifecycle spans (queue wait, prefill "
+                         "chunks, decode steps, retire) plus SMR ping->"
+                         "publish->ack trees and block alloc/free instants; "
+                         "open in ui.perfetto.dev")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the latency/stall histogram summary "
+                         "(TTFT, per-token, queue wait, ping stall)")
     args = ap.parse_args()
 
     cfg = ArchConfig(name="serve-demo", d_model=64, n_heads=4, n_kv_heads=2,
                      d_ff=128, vocab=128, groups=dense_stack(2), remat="none",
                      dtype="float32")
     params = init_params(cfg, jax.random.PRNGKey(0))
+    # when tracing the native pool policy, force a publish-on-ping pass
+    # every few reclaims: a short demo run rarely builds real pressure, and
+    # a trace without ping->publish->ack trees would show nothing of the
+    # paper's mechanism.  Simulated schemes ping on their own cadence.
+    policy_kw = {}
+    if args.trace and args.smr in (None, "EpochPOP-pool"):
+        policy_kw["pop_every"] = 2
+    tracer = Tracer() if args.trace else None
     pool = BlockPool(128, n_engines=args.engines + args.prefill_workers + 1,
                      reclaim_threshold=8, pressure_factor=2,
-                     policy=make_policy(args.smr, backend=args.sim_backend))
+                     policy=make_policy(args.smr, backend=args.sim_backend,
+                                        **policy_kw))
     eng = ServeEngine(cfg, params, max_batch=4, page_size=8, max_seq=64,
                       pool=pool, n_engines=args.engines,
                       prefix_cache=args.prefix_cache,
                       kv_store=args.kv_store, kv_storage=args.kv_storage,
                       prefill_workers=args.prefill_workers,
-                      prefill_chunk=args.prefill_chunk)
+                      prefill_chunk=args.prefill_chunk,
+                      trace=tracer)
     eng.start()
     t0 = time.time()
     # a hot shared prefix (page-aligned when --prefix-cache) + a unique tail
@@ -135,6 +157,22 @@ def main():
               f"bytes_h2d={kv['bytes_h2d']} "
               f"({kv['bytes_h2d_per_step']:.0f}/step) "
               f"bytes_d2h={kv['bytes_d2h']}")
+    if args.metrics:
+        print("\nlatency/stall histograms (merged on read):")
+        for name, snap in {**eng.snapshot()["metrics"],
+                           **eng.snapshot()["pool_metrics"]}.items():
+            if snap["count"]:
+                print(f"  {name:22s} n={snap['count']:5d} "
+                      f"p50={snap['p50']*1e3:8.2f}ms "
+                      f"p99={snap['p99']*1e3:8.2f}ms "
+                      f"max={snap['max']*1e3:8.2f}ms")
+    if tracer is not None:
+        obj = tracer.export(args.trace)
+        spans = sum(1 for e in obj["traceEvents"]
+                    if e.get("name") == "pop_pass")
+        print(f"trace: {len(obj['traceEvents'])} events "
+              f"({spans} publish-on-ping passes) -> {args.trace} "
+              f"(open in ui.perfetto.dev)")
     if eng.error is not None:
         raise SystemExit(f"ENGINE FAILED: {type(eng.error).__name__}: {eng.error}")
     print("use-after-free: none (hard error if one had occurred)")

@@ -64,6 +64,11 @@ class SMRScheme:
         # optional observer called as free_hook(t, addr) on every free --
         # the gauntlet uses it to timestamp crash recovery
         self.free_hook = None
+        # optional observer called as ping_hook(t, t0, t1) for every timed
+        # ping->all-acks span (simulated cycles) -- the gauntlet records the
+        # full stall distribution (ping_stall_p99_s) and emits cycle-domain
+        # trace spans through it
+        self.ping_hook = None
 
     # ---- lifecycle ----
 
@@ -156,6 +161,19 @@ class SMRScheme:
         self.garbage += 1
         if self.garbage > self.garbage_peak:
             self.garbage_peak = self.garbage
+
+    def _note_ping_stall(self, t: ThreadCtx, t0: float) -> None:
+        """The ping-timing seam: every scheme that pings wraps its
+        ping->wait-for-all-acks window with ``t0 = t.now()`` before and
+        this call after.  Updates the scalar max and feeds the optional
+        ``ping_hook`` observer with the full (t, t0, t1) span so callers
+        can build distributions and traces, not just a maximum."""
+        t1 = t.now()
+        stall = t1 - t0
+        if stall > self.max_ping_stall:
+            self.max_ping_stall = stall
+        if self.ping_hook is not None:
+            self.ping_hook(t, t0, t1)
 
     def _free(self, t: ThreadCtx, addr: int) -> Generator:
         self.birth.pop(addr, None)

@@ -166,9 +166,7 @@ class DebraPlus(SMRScheme):
         t0 = t.now()
         yield from self._ping_all(t)
         yield from self._wait_acks(t, snap)
-        stall = t.now() - t0
-        if stall > self.max_ping_stall:
-            self.max_ping_stall = stall
+        self._note_ping_stall(t, t0)
         # every live read-phase thread is now quiescent; dead threads
         # returned ESRCH from the ping and are excluded from the minimum
         m = yield from self._min_live_announced(t, live_only=True)

@@ -125,9 +125,7 @@ class EpochPOP(SMRScheme):
         t0 = t.now()
         yield from self._ping_all(t)
         yield from self._wait_all_published(t, snap)
-        stall = t.now() - t0
-        if stall > self.max_ping_stall:
-            self.max_ping_stall = stall
+        self._note_ping_stall(t, t0)
         reserved = yield from self._collect_reservations(t)
         keep: List[int] = []
         for addr in t.local["retire"]:

@@ -135,9 +135,7 @@ class NBR(SMRScheme):
         t0 = t.now()
         yield from self._ping_all(t)
         yield from self._wait_acks(t, snap)
-        stall = t.now() - t0
-        if stall > self.max_ping_stall:
-            self.max_ping_stall = stall
+        self._note_ping_stall(t, t0)
         slots = [self._slot(tid, s) for tid in range(self.n)
                  for s in range(self.max_hp)]
         vals = yield from self._load_many(t, slots)

@@ -133,9 +133,7 @@ class HazardPtrPOP(SMRScheme):
         t0 = t.now()
         yield from self._ping_all(t)                 # pingAllToPublish
         yield from self._wait_all_published(t, snap) # waitForAllPublished
-        stall = t.now() - t0
-        if stall > self.max_ping_stall:
-            self.max_ping_stall = stall
+        self._note_ping_stall(t, t0)
         reserved = yield from self._collect_reservations(t)
         keep: List[int] = []
         for addr in t.local["retire"]:
@@ -242,9 +240,7 @@ class HazardEraPOP(SMRScheme):
         t0 = t.now()
         yield from self._ping_all(t)
         yield from self._wait_all_published(t, snap)
-        stall = t.now() - t0
-        if stall > self.max_ping_stall:
-            self.max_ping_stall = stall
+        self._note_ping_stall(t, t0)
         eras = [e for e in t.local["lres"] if e != NONE_ERA]
         slots = [self._slot(tid, s) for tid in range(self.n) if tid != t.tid
                  for s in range(self.max_hp)]

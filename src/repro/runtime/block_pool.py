@@ -36,11 +36,13 @@ schemes handle poorly and the paper's POP fallback is built for).
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass
 from typing import (Any, Callable, Dict, Hashable, List, Optional, Sequence,
                     Set, Tuple)
 
 from repro.core.sim.engine import UseAfterFree
+from repro.obs import MetricsRegistry, Tracer
 from repro.runtime.reclaim import EpochPOPPolicy, ReclaimPolicy
 
 
@@ -73,6 +75,28 @@ class PoolStats:
     shared_peak: int = 0           # peak # of distinct shared blocks
 
 
+class _BlockTraceListener:
+    """Block-listener adapter: lifecycle events -> trace instants.  The
+    ``on_free`` callback fires inside ``_return_blocks_if`` under the pool
+    lock, but an instant only appends to the tracer's thread-local buffer
+    (publish-on-flush), so no lock ordering is introduced."""
+
+    def __init__(self, tracer: Tracer) -> None:
+        self._tr = tracer
+
+    def on_alloc(self, blocks: Sequence[int]) -> None:
+        if self._tr.enabled:
+            self._tr.instant("block_alloc", cat="blocks",
+                             args={"n": len(blocks),
+                                   "blocks": list(blocks)[:8]})
+
+    def on_free(self, blocks: Sequence[int]) -> None:
+        if self._tr.enabled:
+            self._tr.instant("block_free", cat="blocks",
+                             args={"n": len(blocks),
+                                   "blocks": list(blocks)[:8]})
+
+
 class BlockPool:
     """Thread-safe paged block pool with pluggable SMR reclamation.
 
@@ -86,7 +110,9 @@ class BlockPool:
     def __init__(self, num_blocks: int, n_engines: int,
                  reclaim_threshold: int = 32, pressure_factor: int = 2,
                  ping_timeout_s: float = 5.0,
-                 policy: Optional[ReclaimPolicy] = None):
+                 policy: Optional[ReclaimPolicy] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         self.num_blocks = num_blocks
         self.n_engines = n_engines
         self.reclaim_threshold = reclaim_threshold
@@ -128,13 +154,42 @@ class BlockPool:
         self._listeners: List[Any] = []
 
         self.stats = PoolStats()
+        # pool-side observability: ping stall + reclaim-pass histograms live
+        # here (one registry per pool), the tracer is shared with the serve
+        # engine when one is attached
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer: Optional[Tracer] = None
         self.policy = policy or EpochPOPPolicy()
         self.policy.attach(self)
+        if tracer is not None:
+            self.attach_tracer(tracer)
 
     def add_block_listener(self, listener: Any) -> None:
         """Register for on_alloc/on_free block lifecycle callbacks (e.g. a
         :class:`~repro.runtime.kv_store.PagedKVStore`)."""
         self._listeners.append(listener)
+
+    def attach_tracer(self, tracer: Tracer) -> None:
+        """Attach a :class:`~repro.obs.trace.Tracer`: block lifecycle
+        instants flow through the listener seam, the attached policy gets
+        its :meth:`~repro.runtime.reclaim.ReclaimPolicy.on_tracer` hook (the
+        native POP pass emits its ping->publish->ack span tree, sim-backed
+        policies emit cycle-domain ping spans).  Idempotent per tracer."""
+        if self.tracer is tracer:
+            return
+        self.tracer = tracer
+        self.policy.on_tracer(tracer)
+        self.add_block_listener(_BlockTraceListener(tracer))
+
+    def record_ping_stall(self, seconds: float) -> None:
+        """The ONE recorder both reclaim families report their ping-delivery
+        window through.  Records into the locked (immediately merged) path
+        of the pool's ``ping_stall_s`` histogram and derives the
+        ``max_ping_stall_s`` scalar from the merged max -- so the scalar can
+        never split-brain across the reclaimer and engine threads that used
+        to race plain ``max()`` read-modify-writes on it."""
+        vmax = self.metrics.histogram("ping_stall_s").record_locked(seconds)
+        self.stats.max_ping_stall_s = vmax
 
     # ------------------------------------------------------------------
     # engine (reader) API
@@ -480,8 +535,18 @@ class BlockPool:
             self._epoch += 1
 
     def reclaim(self, engine: Optional[int] = None) -> int:
-        """Ask the policy for a reclamation pass.  Returns # blocks freed."""
-        return self.policy.reclaim(engine)
+        """Ask the policy for a reclamation pass.  Returns # blocks freed.
+        Every pass is timed into the pool's ``reclaim_pass_s`` histogram;
+        passes that freed something additionally leave a trace span."""
+        t0 = time.monotonic()
+        freed = self.policy.reclaim(engine)
+        dur = time.monotonic() - t0
+        self.metrics.record("reclaim_pass_s", dur)
+        tr = self.tracer
+        if tr is not None and tr.enabled and freed:
+            tr.complete("reclaim_pass", tr.wall_ts(t0), dur * 1e6, cat="smr",
+                        args={"freed": freed, "engine": engine})
+        return freed
 
     def _return_blocks_if(self, pred: Callable[[int, int], bool]) -> int:
         """Policy callback: free every retired (block, epoch) with

@@ -49,6 +49,7 @@ from typing import Dict, List, Optional, Sequence, Set
 
 from repro.core.sim import make_engine
 from repro.core.sim.engine import Allocator, Costs, UseAfterFree
+from repro.obs import PID_SIM, Tracer
 
 MAX_EPOCH = 1 << 60
 
@@ -64,6 +65,14 @@ class ReclaimPolicy:
 
     def attach(self, pool) -> None:
         self.pool = pool
+
+    def on_tracer(self, tracer: Tracer) -> None:
+        """A tracer was attached to the pool
+        (:meth:`~repro.runtime.block_pool.BlockPool.attach_tracer`).
+        Policies that can narrate their reclamation emit spans through it:
+        the native POP pass draws its ping->publish->ack tree, the
+        sim-backed policy hooks the scheme's ping seam for cycle-domain
+        spans.  Base: no-op."""
 
     def on_engine_crash(self, engine: int) -> None:
         """A reader engine died mid-step (the gauntlet's reader-crash fault,
@@ -125,9 +134,16 @@ class EpochPOPPolicy(ReclaimPolicy):
 
     name = "EpochPOP"
 
-    def __init__(self, ping_timeout_s: Optional[float] = None) -> None:
+    def __init__(self, ping_timeout_s: Optional[float] = None,
+                 pop_every: Optional[int] = None) -> None:
         super().__init__()
         self._ping_timeout_s = ping_timeout_s
+        # run the POP fallback on every Nth reclaim() call even without
+        # retired-list pressure -- observability knob (a traced run is
+        # guaranteed ping spans without having to manufacture pressure),
+        # never the default
+        self.pop_every = pop_every
+        self._reclaim_calls = 0
 
     def attach(self, pool) -> None:
         super().attach(pool)
@@ -197,11 +213,13 @@ class EpochPOPPolicy(ReclaimPolicy):
         wait for its own publish counter)."""
         pool = self.pool
         pool.bump_epoch()
+        self._reclaim_calls += 1
         freed = self._reclaim_epoch()
         with pool._lock:
             pressure = len(pool._retired) >= (pool.pressure_factor
                                               * pool.reclaim_threshold)
-        if pressure:
+        if pressure or (self.pop_every
+                        and self._reclaim_calls % self.pop_every == 0):
             freed += self._reclaim_pop(engine)
         return freed
 
@@ -237,21 +255,28 @@ class EpochPOPPolicy(ReclaimPolicy):
             self._ping_flags[i].set()
         deadline = t_ping + self._ping_timeout_s
         pending = set(others)
+        published_at: Dict[int, float] = {}
         while pending and time.monotonic() < deadline:
             if engine is not None:
                 # service our own ping while waiting: two concurrent POP
                 # passes would otherwise deadlock on each other's publish
                 # counters until timeout (signals interrupt anything)
                 self.safepoint(engine)
-            pending = {i for i in pending
-                       if self._publish_counter[i] <= snap[i]}
+            landed = {i for i in pending
+                      if self._publish_counter[i] > snap[i]}
+            if landed:
+                now = time.monotonic()
+                for i in landed:
+                    published_at[i] = now
+                pending -= landed
             if pending:
                 time.sleep(0.0005)
         # the ping-delivery window this pass actually experienced: how long
         # the slowest reader took to reach a safepoint and publish (the
         # chunked-prefill bound the serve_reclaim grid reports per scheme)
         stall = time.monotonic() - t_ping
-        pool.stats.max_ping_stall_s = max(pool.stats.max_ping_stall_s, stall)
+        pool.record_ping_stall(stall)
+        self._trace_pop_pass(t_ping, stall, others, published_at, pending)
         if pending:
             # Assumption 1 violated (engine died?): stay safe, free nothing
             # beyond what epochs allow.
@@ -270,6 +295,35 @@ class EpochPOPPolicy(ReclaimPolicy):
         if freed:
             pool.stats.pop_reclaims += 1
         return freed
+
+    def _trace_pop_pass(self, t_ping: float, stall: float,
+                        others: Sequence[int],
+                        published_at: Dict[int, float],
+                        pending: Set[int]) -> None:
+        """Draw one ping->publish->ack span tree in the wall-clock domain:
+        a ``pop_pass`` parent on the reclaiming thread's track, one
+        ``publish`` child per pinged reader slot on its own synthetic track
+        (``smr reader e<i>``, so the per-reader windows stack visually in
+        Perfetto), and a closing ``pop_ack`` instant.  Spans are linked by a
+        shared ``pass`` id in args."""
+        tr = getattr(self.pool, "tracer", None)
+        if tr is None or not tr.enabled:
+            return
+        ts0 = tr.wall_ts(t_ping)
+        aid = tr.next_async_id()
+        tr.complete("pop_pass", ts0, stall * 1e6, cat="smr",
+                    args={"pass": aid, "readers": len(others),
+                          "timed_out": sorted(pending)})
+        t_end = t_ping + stall
+        for i in others:
+            t_pub = published_at.get(i, t_end)
+            tr.complete("publish", ts0, (t_pub - t_ping) * 1e6, cat="smr",
+                        tid=tr.tid_named(f"smr reader e{i}"),
+                        args={"pass": aid, "reader": i,
+                              "published": i in published_at})
+        tr.instant("pop_ack", ts_us=ts0 + stall * 1e6, cat="smr",
+                   args={"pass": aid, "acked": len(published_at),
+                         "pinged": len(others)})
 
 
 class UnsafeEagerPolicy(ReclaimPolicy):
@@ -462,12 +516,28 @@ class SimulatedSMRPolicy(ReclaimPolicy):
             # includes waiting on the policy lock behind a mid-prefill
             # drive -- exactly the contention the chunk bound caps)
             stall = time.monotonic() - t0
-            s = self.pool.stats
-            s.max_ping_stall_s = max(s.max_ping_stall_s, stall)
+            self.pool.record_ping_stall(stall)
             return self.pool.stats.freed - before
 
     def flush(self) -> int:
         return self.reclaim(None)
+
+    def on_tracer(self, tracer: Tracer) -> None:
+        """Hook the scheme's ping-timing seam: every timed
+        ping->all-acks window any simulated reclaimer experiences becomes a
+        ``ping_pass`` span in the cycle-clock domain (``PID_SIM``), on a
+        track named after the simulated thread -- so a sim-backed serve run
+        shows both domains side by side in one trace."""
+        scheme = self.scheme_name
+
+        def hook(t, t0: float, t1: float) -> None:
+            tracer.complete(
+                "ping_pass", Tracer.sim_ts(t0), Tracer.sim_ts(t1 - t0),
+                cat="smr", pid=PID_SIM,
+                tid=tracer.tid_named(f"sim t{t.tid}", PID_SIM),
+                args={"scheme": scheme})
+
+        self.smr.ping_hook = hook
 
     # -- plumbing --
 

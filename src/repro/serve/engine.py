@@ -29,6 +29,7 @@ import jax
 
 from repro.configs.base import ArchConfig
 from repro.models.model import apply_model
+from repro.obs import MetricsRegistry, Tracer
 from repro.runtime.block_pool import BlockPool
 from repro.runtime.kv_store import PagedKVStore
 from repro.serve.scheduler import Scheduler
@@ -76,9 +77,17 @@ class ServeEngine:
                  kv_store: str = "dense", kv_storage: str = "device",
                  kernel_impl: Optional[str] = None,
                  evict_policy: str = "lru",
-                 prefill_workers: int = 0, prefill_chunk: int = 16):
+                 prefill_workers: int = 0, prefill_chunk: int = 16,
+                 trace: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
         self.params = params
+        # observability: an engine-level registry always exists (recording
+        # into unmerged thread-local shards is the cheap default); the
+        # tracer is opt-in and is shared with the pool so SMR ping spans
+        # land in the same trace as the request lifecycle
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = trace
         if kv_store not in ("dense", "paged"):
             raise ValueError(f"kv_store must be 'dense' or 'paged', "
                              f"got {kv_store!r}")
@@ -119,6 +128,8 @@ class ServeEngine:
                 f"pool has {pool.n_engines} engine slots, need {n_actors} "
                 f"({n_engines} decode + {prefill_workers} prefill)")
         self.pool = pool
+        if trace is not None:
+            pool.attach_tracer(trace)
         self.n_engines = n_engines
         # paged KV mode: ONE physical page store shared by every worker,
         # registered as a pool block listener so frees poison pages and
@@ -140,7 +151,8 @@ class ServeEngine:
                          max_seq=max_seq, prefix_cache=prefix_cache,
                          kv_store=self.kv_store, kernel_impl=kernel_impl,
                          evict_policy=evict_policy,
-                         prefill_chunk=prefill_chunk)
+                         prefill_chunk=prefill_chunk,
+                         tracer=trace, metrics=self.metrics)
             for i in range(n_engines)]
         # prefill workers take the engine ids right after the decode fleet
         self.prefill_workers: List[PrefillWorker] = [
@@ -148,7 +160,8 @@ class ServeEngine:
                           page_size=page_size, max_seq=max_seq,
                           prefix_cache=prefix_cache, kv_store=self.kv_store,
                           kernel_impl=kernel_impl, evict_policy=evict_policy,
-                          prefill_chunk=prefill_chunk)
+                          prefill_chunk=prefill_chunk,
+                          tracer=trace, metrics=self.metrics)
             for j in range(prefill_workers)]
         # dedicated reclaimer only if the pool has a spare engine slot;
         # otherwise workers reclaim on pressure (pre-split behavior)
@@ -158,7 +171,8 @@ class ServeEngine:
                                        interval_s=reclaim_interval_s,
                                        evict_policy=evict_policy)
         self.scheduler = Scheduler(self.workers, self.reclaimer,
-                                   prefill_workers=self.prefill_workers)
+                                   prefill_workers=self.prefill_workers,
+                                   tracer=trace, metrics=self.metrics)
 
     # -- client API (unchanged from the monolithic engine) --
 
@@ -178,6 +192,27 @@ class ServeEngine:
     @property
     def error(self) -> Optional[BaseException]:
         return self.scheduler.error
+
+    def snapshot(self) -> dict:
+        """One observability snapshot: the engine-level latency histograms
+        (TTFT, per-token latency, queue waits), the pool-level SMR
+        histograms (ping stall, reclaim-pass duration), and the pool's
+        scalar counters.  Safe to call mid-serve -- histograms merge their
+        thread-local shards on read, the publish-on-flush analogue."""
+        from dataclasses import asdict
+
+        return {
+            "metrics": self.metrics.snapshot(),
+            "pool_metrics": self.pool.metrics.snapshot(),
+            "pool": asdict(self.pool.stats),
+        }
+
+    def latency_summary(self, fields=("p50", "p99", "p999", "max")) -> dict:
+        """Flat benchmark-row shape (``ttft_p99_s`` style) combining the
+        engine and pool registries."""
+        out = self.metrics.flat(fields=fields)
+        out.update(self.pool.metrics.flat(fields=fields))
+        return out
 
     @property
     def prefill_tokens(self) -> int:

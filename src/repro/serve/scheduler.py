@@ -26,8 +26,10 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import List, Optional, Sequence
 
+from repro.obs import MetricsRegistry, Tracer
 from repro.serve.worker import (EngineWorker, PrefillWorker, Reclaimer,
                                 Request)
 
@@ -38,11 +40,15 @@ class Scheduler:
 
     def __init__(self, workers: Sequence[EngineWorker],
                  reclaimer: Optional[Reclaimer] = None,
-                 prefill_workers: Sequence[PrefillWorker] = ()):
+                 prefill_workers: Sequence[PrefillWorker] = (),
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.workers: List[EngineWorker] = list(workers)
         self.reclaimer = reclaimer
         self.prefill_workers: List[PrefillWorker] = list(prefill_workers)
         self.prefill_queue: "queue.Queue[Request]" = queue.Queue()
+        self.tracer = tracer
+        self.metrics = metrics
         for pw in self.prefill_workers:
             pw.bind(self)
         self._rid = 0
@@ -56,6 +62,17 @@ class Scheduler:
             self._rid += 1
             rid = self._rid
         r = Request(rid, list(prompt), max_new)
+        r.t_submit = time.monotonic()
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            # the request's async span tree starts on the client thread;
+            # every later phase (queue wait / prefill / decode) nests under
+            # the same id wherever it runs
+            r.aid = tr.next_async_id()
+            tr.async_begin("request", r.aid, cat="request",
+                           args={"rid": rid, "prompt_len": len(r.prompt),
+                                 "max_new": max_new})
+            tr.async_begin("queue_wait", r.aid, cat="request")
         # empty prompts skip the prefill stage (nothing to prefill; decode
         # admission finishes them immediately)
         if r.prompt and any(pw.error is None for pw in self.prefill_workers):

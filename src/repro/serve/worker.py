@@ -70,6 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import init_cache
+from repro.obs import MetricsRegistry, Tracer
 from repro.runtime.block_pool import BlockPool, OutOfBlocks
 from repro.runtime.kv_store import PagedKVStore
 
@@ -94,6 +95,13 @@ class Request:
     hit_len: int = 0
     owner: Optional[int] = None
     cache: Optional[dict] = None
+    # observability timeline (time.monotonic seconds; 0.0 = not yet):
+    # submit -> first pickup (queue wait) -> per-token cadence, plus the
+    # async-span id linking this request's trace events across threads
+    t_submit: float = 0.0
+    t_admitted: float = 0.0
+    t_last_tok: float = 0.0
+    aid: Optional[int] = None
     done: threading.Event = field(default_factory=threading.Event)
 
     @property
@@ -113,7 +121,9 @@ class _PoolActor:
                  prefix_cache: bool = False,
                  kv_store: Optional[PagedKVStore] = None,
                  kernel_impl: Optional[str] = None,
-                 evict_policy: str = "lru", prefill_chunk: int = 16):
+                 evict_policy: str = "lru", prefill_chunk: int = 16,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.engine_id = engine_id
         self.cfg = cfg
         self.params = params
@@ -123,6 +133,8 @@ class _PoolActor:
         self.prefix_cache = prefix_cache
         self.evict_policy = evict_policy
         self.prefill_chunk = prefill_chunk
+        self.tracer = tracer
+        self.metrics = metrics
         self._decode = decode
         # paged KV mode: physical pages + Pallas kernel instead of dense
         # per-request caches (None = dense, the historical path)
@@ -255,6 +267,48 @@ class _PoolActor:
                             r.shared_blocks)
             r.owner = self.engine_id
 
+    # -- observability (publish-on-flush: thread-local buffers/shards) --
+
+    def _note_pickup(self, r: Request, now: float, metric: str) -> None:
+        """First pickup of a submitted request: close its queue-wait phase
+        and record the wait.  Later pickups (prefill->decode handoff, a
+        resumed partial prefill) are not queue waits and no-op."""
+        if r.t_admitted:
+            return
+        r.t_admitted = now
+        if self.metrics is not None and r.t_submit:
+            self.metrics.record(metric, now - r.t_submit)
+        tr = self.tracer
+        if tr is not None and tr.enabled and r.aid is not None:
+            tr.async_end("queue_wait", r.aid, cat="request")
+
+    def _note_token(self, r: Request, now: float) -> None:
+        """Token cadence: TTFT on the first generated token, inter-token
+        latency afterwards."""
+        m = self.metrics
+        if len(r.out) == 1:
+            if m is not None and r.t_submit:
+                m.record("ttft_s", now - r.t_submit)
+            tr = self.tracer
+            if tr is not None and tr.enabled and r.aid is not None:
+                tr.instant("first_token", cat="request",
+                           args={"rid": r.rid})
+        elif m is not None and r.t_last_tok:
+            m.record("tok_latency_s", now - r.t_last_tok)
+        r.t_last_tok = now
+
+    def _finish_trace(self, r: Request, *, finalized: bool = False) -> None:
+        """Close the request's async span tree (retire instant + request
+        end).  ``finalized`` marks the fail/stop path."""
+        tr = self.tracer
+        if tr is None or not tr.enabled or r.aid is None:
+            return
+        tr.instant("retire", cat="request",
+                   args={"rid": r.rid, "tokens": len(r.out),
+                         "finalized": finalized})
+        tr.async_end("request", r.aid, cat="request")
+        r.aid = None
+
     # -- chunked prefill (the bounded ping-delivery window) --
 
     def _run_prefill(self, r: Request) -> bool:
@@ -294,12 +348,21 @@ class _PoolActor:
 
         store = self.kv_store
         hit = r.cache_hit
+        tr = self.tracer
+        t_chunk = time.monotonic()
         for end, _ in prefill_kv_chunked(
                 self.params, self.cfg, store, r.all_blocks, r.prompt,
                 self.prefill_chunk, start=r.prefilled,
                 impl=self.kernel_impl):
             written = (end - r.prefilled) * store.token_bytes
             self.prefill_tokens += end - r.prefilled
+            if tr is not None and tr.enabled:
+                now = time.monotonic()
+                tr.complete("prefill_chunk", tr.wall_ts(t_chunk),
+                            (now - t_chunk) * 1e6, cat="serve",
+                            args={"rid": r.rid, "start": r.prefilled,
+                                  "end": end})
+                t_chunk = now
             r.prefilled = end
             if hit:
                 self.kv_bytes_copied_hit += written
@@ -317,6 +380,8 @@ class _PoolActor:
         dense decode forward is single-token): the safepoint cadence is one
         token, strictly tighter than the chunk bound."""
         toks = jnp.asarray([r.prompt], jnp.int32)
+        start = r.prefilled
+        t0 = time.monotonic()
         for t in range(r.prefilled, len(r.prompt)):
             self.pool.safepoint(self.engine_id)
             if self._stop.is_set():
@@ -326,6 +391,12 @@ class _PoolActor:
             self.prefill_tokens += 1
             r.prefilled = t + 1
             self._publish_prefix(r)
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.complete("prefill_dense", tr.wall_ts(t0),
+                        (time.monotonic() - t0) * 1e6, cat="serve",
+                        args={"rid": r.rid, "start": start,
+                              "end": r.prefilled})
         return True
 
     def _finalize(self, r: Request) -> None:
@@ -341,6 +412,7 @@ class _PoolActor:
                 r.blocks, r.shared_blocks = [], []
         except Exception:  # noqa: BLE001 -- teardown best effort
             pass
+        self._finish_trace(r, finalized=True)
         r.done.set()
 
     def _insert_prefix(self, r: Request, n_full: int, payload) -> None:
@@ -388,12 +460,15 @@ class EngineWorker(_PoolActor):
                  max_seq: int = 256, prefix_cache: bool = False,
                  kv_store: Optional[PagedKVStore] = None,
                  kernel_impl: Optional[str] = None,
-                 evict_policy: str = "lru", prefill_chunk: int = 16):
+                 evict_policy: str = "lru", prefill_chunk: int = 16,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         super().__init__(engine_id, cfg, params, pool, decode,
                          page_size=page_size, max_seq=max_seq,
                          prefix_cache=prefix_cache, kv_store=kv_store,
                          kernel_impl=kernel_impl, evict_policy=evict_policy,
-                         prefill_chunk=prefill_chunk)
+                         prefill_chunk=prefill_chunk, tracer=tracer,
+                         metrics=metrics)
         self.max_batch = max_batch
         self.queue: "queue.Queue[Request]" = queue.Queue()
         self.running: Dict[int, Request] = {}
@@ -431,10 +506,12 @@ class EngineWorker(_PoolActor):
                 r = self.queue.get_nowait()
             except queue.Empty:
                 return
+            self._note_pickup(r, time.monotonic(), "queue_wait_s")
             if not r.prompt:
                 # empty request: nothing to decode from; finish immediately
                 # (the kernel-level empty-row case is exercised directly in
                 # the block-table raggedness tests)
+                self._finish_trace(r)
                 r.done.set()
                 continue
             if r.owner is None:
@@ -463,6 +540,8 @@ class EngineWorker(_PoolActor):
         if not self.running:
             time.sleep(0.001)
             return
+        t_step = time.monotonic()
+        batch = len(self.running)
         # one batched reader session over the whole step's working set: the
         # paper's traversal-retention argument at serving granularity (one
         # publish on ping instead of a fence per block)
@@ -479,8 +558,14 @@ class EngineWorker(_PoolActor):
             if r.shared_blocks:
                 self.pool.release_shared(self.engine_id, r.shared_blocks)
             r.blocks, r.shared_blocks = [], []
+            self._finish_trace(r)
             r.done.set()
         self.steps += 1
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.complete("decode_step", tr.wall_ts(t_step),
+                        (time.monotonic() - t_step) * 1e6, cat="serve",
+                        args={"batch": batch, "finished": len(finished)})
 
     def _step_dense(self) -> List[int]:
         """Per-request decode against private dense caches."""
@@ -493,6 +578,7 @@ class EngineWorker(_PoolActor):
             logits, cache, _ = self._decode(self.params, cache, tok)
             nxt = int(jnp.argmax(logits[0, -1]))
             r.out.append(nxt)
+            self._note_token(r, time.monotonic())
             self._caches[rid] = cache
             if len(r.out) >= r.max_new:
                 finished.append(rid)
@@ -515,9 +601,11 @@ class EngineWorker(_PoolActor):
                                    blocks, lens, last,
                                    impl=self.kernel_impl)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        now = time.monotonic()
         finished = []
         for r, tok in zip(rs, nxt):
             r.out.append(int(tok))
+            self._note_token(r, now)
             if len(r.out) >= r.max_new:
                 finished.append(r.rid)
         return finished
@@ -590,11 +678,21 @@ class PrefillWorker(_PoolActor):
                     r = self.queue.get(timeout=0.002)
                 except queue.Empty:
                     continue
+                self._note_pickup(r, time.monotonic(),
+                                  "prefill_queue_wait_s")
+                tr = self.tracer
+                traced = (tr is not None and tr.enabled
+                          and r.aid is not None)
+                if traced:
+                    tr.async_begin("prefill", r.aid, cat="request",
+                                   args={"resume_from": r.prefilled})
                 self.pool.start_step(self.engine_id)
                 try:
                     done = self.prefill_one(r)
                 finally:
                     self.pool.end_step(self.engine_id)
+                    if traced:
+                        tr.async_end("prefill", r.aid, cat="request")
                 if done:
                     self.requests += 1
                     self._scheduler.place_ready(r)
