@@ -1,0 +1,263 @@
+"""Perf-trajectory regression gate: diff two ``results/*.json`` files into
+a compact report with per-metric tolerance thresholds.
+
+The ROADMAP's ask is that "the perf trajectory across PRs becomes
+diffable" -- a number every subsequent PR must not regress.  This tool is
+that gate:
+
+* **row identity** is generic: every non-numeric scalar field of a row
+  (``scheme``, ``profile``, ``workload``, ``kv_store``, ...) plus the
+  numeric fields conventionally used as grid axes (``engines``,
+  ``threads``, ...) form the key, so the same tool diffs
+  ``fleet_load.json``, ``serve_reclaim.json``, or ``smr_gauntlet.json``
+  without schema knowledge.  Rows present on only one side are reported
+  (``missing``/``added``) but do not fail the gate by default -- grids
+  grow across PRs (``--strict`` makes them fail).
+* **metrics** are the remaining numeric fields.  Each is compared as a
+  relative delta against a direction-aware tolerance policy:
+  higher-is-better metrics (``goodput_under_slo``, ``*tok_per_s*``, ...)
+  regress when they DROP beyond tolerance, lower-is-better metrics
+  (``ttft_p99_s``, ``*_latency_*``, ``us_per_*``, ...) when they RISE.
+  Metrics with no policy entry are reported informationally and never
+  gate.  Defaults: **>10 % goodput drop or >25 % p99-TTFT rise fails**;
+  override per metric with ``--gate NAME=TOL[:up|:down]``.
+* **baseline from git**: ``--baseline [REF]`` reads the baseline rows out
+  of ``git show REF:<path>`` (default HEAD), so CI can diff the working
+  tree against the committed trajectory with no extra files.
+
+Exit status: 0 = clean (or informational deltas only), 1 = at least one
+gated regression (or, with ``--strict``, missing rows).
+
+    PYTHONPATH=src python benchmarks/perf_diff.py A.json B.json
+    PYTHONPATH=src python benchmarks/perf_diff.py --baseline results/fleet_load.json
+    PYTHONPATH=src python benchmarks/perf_diff.py --baseline origin/main \\
+        results/fleet_load.json --gate goodput_under_slo=0.05:down
+"""
+
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import subprocess
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+#: numeric fields that are grid AXES, not measurements: they join the row
+#: identity key so e.g. e=8 and e=16 cells never diff against each other
+KEY_NUMERIC_FIELDS = ("engines", "threads", "nthreads", "param", "seed",
+                      "trace_seed", "prefill_chunk", "prefill_workers",
+                      "stall_every", "window")
+
+#: (glob pattern, direction, relative tolerance); first match wins.
+#: direction "down" = lower-is-worse (a drop regresses),
+#: direction "up"   = higher-is-worse (a rise regresses).
+DEFAULT_GATES: List[Tuple[str, str, float]] = [
+    ("goodput_under_slo", "down", 0.10),
+    ("ttft_p99_s", "up", 0.25),
+]
+
+
+def load_rows(path: str, *, git_ref: Optional[str] = None) -> list:
+    """Rows from a results file -- from the working tree, or from
+    ``git show REF:path`` when ``git_ref`` is given."""
+    if git_ref is None:
+        return json.loads(Path(path).read_text())
+    rel = Path(path)
+    if rel.is_absolute():
+        top = Path(subprocess.run(
+            ["git", "rev-parse", "--show-toplevel"], capture_output=True,
+            text=True, check=True).stdout.strip())
+        rel = rel.relative_to(top)
+    out = subprocess.run(["git", "show", f"{git_ref}:{rel.as_posix()}"],
+                         capture_output=True, text=True)
+    if out.returncode != 0:
+        raise FileNotFoundError(
+            f"git show {git_ref}:{rel.as_posix()} failed: "
+            f"{out.stderr.strip()}")
+    return json.loads(out.stdout)
+
+
+def row_key(row: dict) -> tuple:
+    """Identity of a row: every non-numeric scalar field + the numeric
+    grid axes, as a sorted tuple (stable across field ordering)."""
+    parts = []
+    for k, v in row.items():
+        if isinstance(v, bool) or isinstance(v, str) or v is None:
+            parts.append((k, v))
+        elif isinstance(v, (int, float)) and k in KEY_NUMERIC_FIELDS:
+            parts.append((k, v))
+    return tuple(sorted(parts))
+
+
+def row_metrics(row: dict) -> Dict[str, float]:
+    """The measurable fields: numeric scalars that are not identity axes."""
+    return {k: float(v) for k, v in row.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)
+            and k not in KEY_NUMERIC_FIELDS}
+
+
+def gate_for(metric: str,
+             gates: List[Tuple[str, str, float]]) -> Optional[Tuple[str, float]]:
+    for pat, direction, tol in gates:
+        if fnmatch.fnmatch(metric, pat):
+            return direction, tol
+    return None
+
+
+def compare(base_rows: list, new_rows: list,
+            gates: List[Tuple[str, str, float]] = None) -> dict:
+    """Pair rows by identity, delta every shared metric, apply the gates.
+
+    Returns ``{matched, missing, added, diffs, regressions}`` where each
+    diff is ``{key, metric, base, new, delta_frac, gated, regressed}``.
+    Duplicate identities pair up in file order (a grid that runs the same
+    cell twice diffs run-for-run).
+    """
+    gates = DEFAULT_GATES if gates is None else gates
+    by_key: Dict[tuple, List[dict]] = {}
+    for r in base_rows:
+        by_key.setdefault(row_key(r), []).append(r)
+    matched, added, diffs = 0, [], []
+    for r in new_rows:
+        k = row_key(r)
+        pool = by_key.get(k)
+        if not pool:
+            added.append(k)
+            continue
+        b = pool.pop(0)
+        matched += 1
+        bm, nm = row_metrics(b), row_metrics(r)
+        for metric in sorted(set(bm) & set(nm)):
+            bv, nv = bm[metric], nm[metric]
+            if bv == nv:
+                delta = 0.0
+            elif bv == 0.0:
+                delta = float("inf") if nv > 0 else float("-inf")
+            else:
+                delta = (nv - bv) / abs(bv)
+            g = gate_for(metric, gates)
+            regressed = False
+            if g is not None:
+                direction, tol = g
+                regressed = (delta < -tol if direction == "down"
+                             else delta > tol)
+            if delta != 0.0 or regressed:
+                diffs.append({"key": k, "metric": metric, "base": bv,
+                              "new": nv, "delta_frac": delta,
+                              "gated": g is not None,
+                              "regressed": regressed})
+    missing = [k for k, pool in by_key.items() for _ in pool]
+    return {"matched": matched, "missing": missing, "added": added,
+            "diffs": diffs,
+            "regressions": sum(d["regressed"] for d in diffs)}
+
+
+def _fmt_key(key: tuple) -> str:
+    ident = [f"{v}" for k, v in key
+             if k in ("scheme", "profile", "workload", "structure",
+                      "fault_mode", "kv_store", "pressure", "backend")
+             and v is not None]
+    axes = [f"{k[0]}{v}" for k, v in key
+            if k in KEY_NUMERIC_FIELDS and not isinstance(v, str)]
+    return ":".join(ident + axes) or repr(key)
+
+
+def format_report(report: dict, *, base_label: str, new_label: str,
+                  verbose: bool = False) -> str:
+    lines = [f"perf_diff: {new_label} vs {base_label}",
+             f"  rows: {report['matched']} matched, "
+             f"{len(report['missing'])} missing, "
+             f"{len(report['added'])} added"]
+    gated = [d for d in report["diffs"] if d["gated"]]
+    info = [d for d in report["diffs"] if not d["gated"]]
+    if not report["diffs"]:
+        lines.append("  metrics: zero diff")
+    for d in sorted(gated, key=lambda d: -abs(d["delta_frac"])):
+        mark = "REGRESSED" if d["regressed"] else "ok"
+        lines.append(
+            f"  [{mark:9s}] {_fmt_key(d['key'])} {d['metric']}: "
+            f"{d['base']:.6g} -> {d['new']:.6g} "
+            f"({d['delta_frac']:+.1%})")
+    if info:
+        if verbose:
+            for d in sorted(info, key=lambda d: -abs(d["delta_frac"]))[:40]:
+                lines.append(
+                    f"  [info     ] {_fmt_key(d['key'])} {d['metric']}: "
+                    f"{d['base']:.6g} -> {d['new']:.6g} "
+                    f"({d['delta_frac']:+.1%})")
+        else:
+            lines.append(f"  ({len(info)} ungated metric deltas; "
+                         f"--verbose to list)")
+    for k in report["missing"]:
+        lines.append(f"  [missing  ] {_fmt_key(k)}")
+    for k in report["added"]:
+        lines.append(f"  [added    ] {_fmt_key(k)}")
+    lines.append(f"  regressions: {report['regressions']}")
+    return "\n".join(lines)
+
+
+def parse_gate(spec: str) -> Tuple[str, str, float]:
+    """``NAME=TOL[:up|:down]`` -> (pattern, direction, tolerance)."""
+    name, _, rest = spec.partition("=")
+    if not rest:
+        raise ValueError(f"bad --gate {spec!r}: want NAME=TOL[:up|:down]")
+    tol, _, direction = rest.partition(":")
+    direction = direction or "down"
+    if direction not in ("up", "down"):
+        raise ValueError(f"bad --gate direction {direction!r}")
+    return name, direction, float(tol)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("files", nargs="*",
+                    help="two results files (base new), or one file with "
+                         "--baseline")
+    ap.add_argument("--baseline", nargs="?", const="HEAD", default=None,
+                    metavar="REF",
+                    help="diff the working-tree file against git REF's "
+                         "copy (default HEAD)")
+    ap.add_argument("--gate", action="append", default=[],
+                    metavar="NAME=TOL[:up|:down]",
+                    help="add/override a tolerance gate (glob NAME)")
+    ap.add_argument("--strict", action="store_true",
+                    help="missing rows also fail the gate")
+    ap.add_argument("--verbose", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the raw report as JSON instead of text")
+    args = ap.parse_args(argv)
+
+    gates = [parse_gate(s) for s in args.gate] + DEFAULT_GATES
+    if args.baseline is not None:
+        if len(args.files) != 1:
+            files = args.files or ["results/fleet_load.json"]
+            if len(files) != 1:
+                ap.error("--baseline takes exactly one results file")
+        else:
+            files = args.files
+        path = files[0]
+        base = load_rows(path, git_ref=args.baseline)
+        new = load_rows(path)
+        base_label = f"{args.baseline}:{path}"
+        new_label = path
+    elif len(args.files) == 2:
+        base, new = (load_rows(p) for p in args.files)
+        base_label, new_label = args.files
+    else:
+        ap.error("need two files, or one file with --baseline [REF]")
+        return 2
+    report = compare(base, new, gates)
+    if args.json:
+        print(json.dumps(report, indent=1, default=list))
+    else:
+        print(format_report(report, base_label=base_label,
+                            new_label=new_label, verbose=args.verbose))
+    failed = report["regressions"] > 0 or (
+        args.strict and report["missing"])
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,6 +3,15 @@ on the simulator and reports the paper's metrics -- throughput (ops per
 million simulated cycles), fences, signals, publishes, restarts, garbage
 peak/final.  Mirrors the setbench methodology (§5.0.2): prefill to half the
 key range, then timed mixed operations.
+
+Determinism contract: every stochastic draw flows through an injected
+seeded ``random.Random`` -- never the module-global RNG -- so trial rows
+are bit-reproducible from ``seed`` alone (the gauntlet's row-determinism
+regression and the fleet harness's replayable traces both lean on this).
+``rng_factory(seed, tid)`` is the seam: the default derivation
+(``Random((seed << 16) ^ tid ^ 0x5EED)``, tid -1 for the single-threaded
+prefill shuffle) keeps historical streams byte-identical, and tests can
+inject a recording factory to audit every draw.
 """
 
 from __future__ import annotations
@@ -31,6 +40,15 @@ WORKLOADS = {
     "read": (0.90, 0.05, 0.05),
     "update": (0.0, 0.50, 0.50),
 }
+
+
+def default_rng_factory(seed: int, tid: int) -> random.Random:
+    """The canonical per-thread RNG derivation (tid -1 = prefill stream).
+    A pure function of (seed, tid): equal inputs give equal streams, and
+    no draw anywhere in the harness touches the module-global RNG."""
+    if tid < 0:
+        return random.Random(seed)
+    return random.Random((seed << 16) ^ tid ^ 0x5EED)
 
 
 @dataclass
@@ -65,9 +83,10 @@ def _op_body(
     seed: int,
     result: TrialResult,
     read_only: bool = False,
+    rng_factory: Callable[[int, int], random.Random] = default_rng_factory,
 ):
     def body(t: ThreadCtx):
-        rng = random.Random((seed << 16) ^ t.tid ^ 0x5EED)
+        rng = rng_factory(seed, t.tid)
         smr.thread_init(t)
         ops = 0
         while t.clock < duration:
@@ -112,10 +131,13 @@ def _op_body(
     return body
 
 
-def prefill(engine: Engine, structure, smr, key_range: int, target: int, seed: int):
+def prefill(engine: Engine, structure, smr, key_range: int, target: int,
+            seed: int,
+            rng_factory: Callable[[int, int], random.Random]
+            = default_rng_factory):
     """Prefill to ``target`` keys (paper: half the key range), single-threaded."""
     keys = list(range(key_range))
-    random.Random(seed).shuffle(keys)
+    rng_factory(seed, -1).shuffle(keys)
     keys = keys[:target]
 
     def body(t: ThreadCtx):
@@ -149,6 +171,7 @@ def run_trial(
     preempt_prob: float = 0.0,
     max_steps: int = 80_000_000,
     backend: str = "gen",
+    rng_factory: Callable[[int, int], random.Random] = default_rng_factory,
 ) -> TrialResult:
     engine = make_engine(nthreads, backend=backend, costs=costs, seed=seed,
                          preempt_prob=preempt_prob)
@@ -157,14 +180,16 @@ def run_trial(
     )
     engine.set_signal_handler(smr.handler)
     structure = STRUCTURES[structure_name](engine, smr, key_range)
-    prefill(engine, structure, smr, key_range, key_range // 2, seed)
+    prefill(engine, structure, smr, key_range, key_range // 2, seed,
+            rng_factory=rng_factory)
 
     read_frac, ins_frac, _ = WORKLOADS[workload]
     res = TrialResult(structure_name, scheme_name, nthreads, workload)
     for tid in range(nthreads):
         engine.spawn(
             tid,
-            _op_body(structure, smr, duration, read_frac, ins_frac, key_range, seed, res),
+            _op_body(structure, smr, duration, read_frac, ins_frac,
+                     key_range, seed, res, rng_factory=rng_factory),
         )
     engine.run(max_steps=max_steps)
 

@@ -13,10 +13,18 @@ reservations add none until a reclaimer pings.
 * :class:`~repro.obs.metrics.MetricsRegistry` -- log-bucketed histograms
   (p50/p99/p999/max) for TTFT, per-token latency, prefill queue wait, ping
   stall, and reclaim-pass duration.
+* :class:`~repro.obs.slo.SLOTracker` -- SLO attainment and goodput
+  accounting (SLO-meeting tokens/s, per-tenant, windowed over the run)
+  plus the :class:`~repro.obs.slo.TimeSeriesSampler` that exports gauge
+  trajectories (queue depth, resident KV bytes, ping-stall p99) as
+  time-series rows.
 """
 
 from repro.obs.metrics import Histogram, MetricsRegistry, summary_keys
+from repro.obs.slo import SLOSpec, SLOTracker, TimeSeriesSampler, \
+    engine_probes
 from repro.obs.trace import PID_SIM, PID_WALL, Tracer, validate_trace
 
 __all__ = ["Histogram", "MetricsRegistry", "PID_SIM", "PID_WALL",
-           "Tracer", "summary_keys", "validate_trace"]
+           "SLOSpec", "SLOTracker", "TimeSeriesSampler", "Tracer",
+           "engine_probes", "summary_keys", "validate_trace"]

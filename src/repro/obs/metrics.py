@@ -245,15 +245,22 @@ class MetricsRegistry:
         return {name: self._hists[name].snapshot() for name in self.names()}
 
     def flat(self, names: Optional[List[str]] = None,
-             fields=("p50", "p99", "p999", "max")) -> Dict[str, float]:
+             fields=summary_keys) -> Dict[str, float]:
         """Flattened ``{metric}_{field}`` dict -- the benchmark-row shape
         (``ttft_p99_s`` style: callers pick names that already carry the
-        unit suffix, e.g. ``ttft_s`` -> ``ttft_p99_s``)."""
+        unit suffix, e.g. ``ttft_s`` -> ``ttft_p99_s``).  ``count`` is a
+        sample count, not a latency, so it never gets the unit suffix:
+        ``ttft_s`` flattens to ``ttft_count``, ``ttft_mean_s``,
+        ``ttft_p99_s``, ... -- the count/mean columns are what goodput math
+        and ``benchmarks/perf_diff.py`` normalize against."""
         out: Dict[str, float] = {}
         for name in (self.names() if names is None else names):
             snap = self.histogram(name).snapshot()
             stem, suffix = (name[:-2], "_s") if name.endswith("_s") \
                 else (name, "")
             for f in fields:
-                out[f"{stem}_{f}{suffix}"] = snap[f]
+                if f == "count":
+                    out[f"{stem}_count"] = snap[f]
+                else:
+                    out[f"{stem}_{f}{suffix}"] = snap[f]
         return out

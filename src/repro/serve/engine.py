@@ -79,7 +79,9 @@ class ServeEngine:
                  evict_policy: str = "lru",
                  prefill_workers: int = 0, prefill_chunk: int = 16,
                  trace: Optional[Tracer] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 stall_every: int = 0, stall_s: float = 0.0,
+                 stall_workers: Optional[Sequence[int]] = None):
         self.cfg = cfg
         self.params = params
         # observability: an engine-level registry always exists (recording
@@ -145,6 +147,14 @@ class ServeEngine:
         # thread-safe; the compile cache is shared)
         self._decode = jax.jit(
             lambda p, c, t: apply_model(p, t, cfg=cfg, mode="decode", cache=c))
+        # desched-stall fault injection (the load harness's "frequently
+        # delayed threads" cell): afflicted decode workers sleep stall_s
+        # every stall_every-th step MID-step, reader session held.  Default
+        # victim set when enabled: worker 0 only, so the fleet contrast is
+        # one delayed reader vs N-1 healthy ones.
+        if stall_every and stall_workers is None:
+            stall_workers = (0,)
+        stall_set = set(stall_workers or ())
         self.workers: List[EngineWorker] = [
             EngineWorker(i, cfg, params, pool, self._decode,
                          max_batch=max_batch, page_size=page_size,
@@ -152,7 +162,9 @@ class ServeEngine:
                          kv_store=self.kv_store, kernel_impl=kernel_impl,
                          evict_policy=evict_policy,
                          prefill_chunk=prefill_chunk,
-                         tracer=trace, metrics=self.metrics)
+                         tracer=trace, metrics=self.metrics,
+                         stall_every=stall_every if i in stall_set else 0,
+                         stall_s=stall_s if i in stall_set else 0.0)
             for i in range(n_engines)]
         # prefill workers take the engine ids right after the decode fleet
         self.prefill_workers: List[PrefillWorker] = [
@@ -213,6 +225,11 @@ class ServeEngine:
         out = self.metrics.flat(fields=fields)
         out.update(self.pool.metrics.flat(fields=fields))
         return out
+
+    @property
+    def injected_stalls(self) -> int:
+        """Desched stalls injected so far across the decode fleet."""
+        return sum(w.injected_stalls for w in self.workers)
 
     @property
     def prefill_tokens(self) -> int:

@@ -96,10 +96,12 @@ class Request:
     owner: Optional[int] = None
     cache: Optional[dict] = None
     # observability timeline (time.monotonic seconds; 0.0 = not yet):
-    # submit -> first pickup (queue wait) -> per-token cadence, plus the
-    # async-span id linking this request's trace events across threads
+    # submit -> first pickup (queue wait) -> first token (TTFT) -> per-token
+    # cadence, plus the async-span id linking this request's trace events
+    # across threads
     t_submit: float = 0.0
     t_admitted: float = 0.0
+    t_first_tok: float = 0.0
     t_last_tok: float = 0.0
     aid: Optional[int] = None
     done: threading.Event = field(default_factory=threading.Event)
@@ -287,6 +289,7 @@ class _PoolActor:
         latency afterwards."""
         m = self.metrics
         if len(r.out) == 1:
+            r.t_first_tok = now
             if m is not None and r.t_submit:
                 m.record("ttft_s", now - r.t_submit)
             tr = self.tracer
@@ -462,7 +465,8 @@ class EngineWorker(_PoolActor):
                  kernel_impl: Optional[str] = None,
                  evict_policy: str = "lru", prefill_chunk: int = 16,
                  tracer: Optional[Tracer] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 stall_every: int = 0, stall_s: float = 0.0):
         super().__init__(engine_id, cfg, params, pool, decode,
                          page_size=page_size, max_seq=max_seq,
                          prefix_cache=prefix_cache, kv_store=kv_store,
@@ -474,6 +478,18 @@ class EngineWorker(_PoolActor):
         self.running: Dict[int, Request] = {}
         self._caches: Dict[int, dict] = {}
         self.steps = 0
+        # fault injection: every Nth decode step, sleep mid-step for
+        # stall_s -- AFTER reserving the step's reader session and BEFORE
+        # any safepoint, i.e. exactly the descheduled-reader window the
+        # paper's "not frequently delayed" condition is about.  A POP ping
+        # that lands during the stall waits the full sleep for this
+        # reader's publish; an EBR-style pass pins the epoch and garbage
+        # accumulates instead.  (FaultPlan can't produce this: driven sim
+        # code is exempt from plan faults -- this knob stalls the REAL
+        # worker thread.)
+        self.stall_every = stall_every
+        self.stall_s = stall_s
+        self.injected_stalls = 0
 
     # -- scheduler-facing API --
 
@@ -547,6 +563,18 @@ class EngineWorker(_PoolActor):
         # publish on ping instead of a fence per block)
         session = [b for r in self.running.values() for b in r.all_blocks]
         self.pool.reserve(self.engine_id, session)
+        if self.stall_every and self.steps % self.stall_every == \
+                self.stall_every - 1:
+            self.injected_stalls += 1
+            tr = self.tracer
+            if tr is None or not tr.enabled:
+                time.sleep(self.stall_s)
+            else:
+                t0 = time.monotonic()
+                time.sleep(self.stall_s)
+                tr.complete("desched_stall", tr.wall_ts(t0),
+                            (time.monotonic() - t0) * 1e6, cat="fault",
+                            args={"engine": self.engine_id})
         if self.kv_store is not None:
             finished = self._step_paged()
         else:

@@ -1,0 +1,61 @@
+"""benchmarks/fleet_load.py: the 8-engine fleet smoke.  One trace, two
+schemes (EpochPOP and EBR, vec backend): zero UAF, nonzero goodput, and
+every acceptance-contract column present in the row."""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.fleet_load import (_tiny_cfg_params, profile_spec,  # noqa: E402
+                                   run_cell, to_csv)
+from repro.serve.loadgen import generate  # noqa: E402
+
+#: every committed fleet row must carry these (ISSUE 9 acceptance criteria)
+REQUIRED_COLUMNS = ("goodput_under_slo", "ttft_p99_s", "peak_kv_bytes",
+                    "max_ping_stall_s", "samples", "slo_attainment",
+                    "goodput_per_tenant", "slo_windows", "uaf")
+
+
+@pytest.fixture(scope="module")
+def fleet_rows():
+    cfg, params = _tiny_cfg_params()
+    trace = generate(profile_spec("calm", duration_s=1.0, rate_rps=10.0,
+                                  seed=11))
+    assert trace.requests, "empty trace would make the smoke vacuous"
+    return [run_cell(scheme, "calm", trace, engines=8, sim_backend="vec",
+                     cfg=cfg, params=params)
+            for scheme in ("EpochPOP", "EBR")]
+
+
+def test_fleet_smoke_zero_uaf_nonzero_goodput(fleet_rows):
+    for row in fleet_rows:
+        assert row["uaf"] == 0, row["errors"]
+        assert row["errors"] == []
+        assert row["goodput_under_slo"] > 0.0
+        assert row["completed"] == row["requests"]
+        assert row["engines"] == 8 and row["sim_backend"] == "vec"
+
+
+def test_fleet_rows_carry_acceptance_columns(fleet_rows):
+    for row in fleet_rows:
+        for col in REQUIRED_COLUMNS:
+            assert col in row, f"missing {col}"
+        assert len(row["samples"]) >= 2          # a real time series
+        assert all("t_s" in s for s in row["samples"])
+        assert set(row["goodput_per_tenant"]) <= {"chat", "batch", "tools"}
+        # count/mean columns from the extended flat() ride along
+        assert row["ttft_count"] == row["completed"]
+        assert row["ttft_mean_s"] > 0.0
+
+
+def test_fleet_csv_schema(fleet_rows):
+    lines = to_csv(fleet_rows)
+    assert len(lines) == len(fleet_rows)
+    for line in lines:
+        name, us, derived = line.split(",", 2)
+        assert name.startswith("fleet_load:") and "@vec" in name
+        float(us)
+        assert "goodput=" in derived and "uaf=0" in derived

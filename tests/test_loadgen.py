@@ -1,0 +1,186 @@
+"""serve/loadgen.py: deterministic trace generation, serialization
+round-trip, and replay -- the fleet harness's reproducibility contract."""
+
+import random
+
+import pytest
+
+from repro.serve.loadgen import (Trace, TenantSpec, WorkloadSpec, generate,
+                                 replay, sample_length)
+
+TENANTS = (
+    TenantSpec("chat", weight=3.0, system_prefix=16,
+               prompt_len={"kind": "lognormal", "mu": 2.0, "sigma": 0.7,
+                           "lo": 4, "hi": 32},
+               output_len={"kind": "zipf", "alpha": 1.3, "lo": 2, "hi": 10}),
+    TenantSpec("batch", weight=1.0,
+               prompt_len={"kind": "fixed", "value": 12},
+               output_len={"kind": "fixed", "value": 6}),
+)
+
+
+def _spec(**kw):
+    base = dict(duration_s=2.0, seed=7, tenants=TENANTS, process="poisson",
+                rate_rps=20.0, vocab=64)
+    base.update(kw)
+    return WorkloadSpec(**base)
+
+
+# -- length distributions -------------------------------------------------
+
+
+def test_sample_length_bounds_and_determinism():
+    rng = random.Random(3)
+    logn = {"kind": "lognormal", "mu": 2.0, "sigma": 1.0, "lo": 4, "hi": 32}
+    zipf = {"kind": "zipf", "alpha": 1.2, "lo": 2, "hi": 10}
+    for dist, lo, hi in ((logn, 4, 32), (zipf, 2, 10)):
+        vals = [sample_length(dist, rng) for _ in range(200)]
+        assert all(lo <= v <= hi for v in vals)
+        assert len(set(vals)) > 1          # actually a distribution
+    assert sample_length({"kind": "fixed", "value": 9}, rng) == 9
+    # same seed, same stream
+    a = [sample_length(zipf, random.Random(5)) for _ in range(20)]
+    b = [sample_length(zipf, random.Random(5)) for _ in range(20)]
+    assert a == b
+    with pytest.raises(ValueError):
+        sample_length({"kind": "nope"}, rng)
+
+
+def test_zipf_is_head_heavy():
+    rng = random.Random(11)
+    dist = {"kind": "zipf", "alpha": 1.5, "lo": 1, "hi": 20}
+    vals = [sample_length(dist, rng) for _ in range(500)]
+    # power law: the smallest value dominates any tail value
+    assert vals.count(1) > vals.count(20) * 3
+
+
+# -- generation determinism ----------------------------------------------
+
+
+def test_same_seed_same_trace_bitwise():
+    a, b = generate(_spec()), generate(_spec())
+    assert a.to_json() == b.to_json()
+    assert [r.t_s for r in a.requests] == [r.t_s for r in b.requests]
+    assert [r.prompt for r in a.requests] == [r.prompt for r in b.requests]
+
+
+def test_different_seed_different_trace():
+    assert generate(_spec()).to_json() != generate(_spec(seed=8)).to_json()
+
+
+def test_gamma_and_diurnal_arrivals():
+    bursty = generate(_spec(process="gamma", burstiness=8.0, seed=3))
+    calm = generate(_spec(seed=3))
+    assert bursty.to_json() != calm.to_json()
+    assert all(0 <= r.t_s < 2.0 for r in bursty.requests)
+    # diurnal ramp: second half at 4x the rate of the first half
+    ramp = generate(_spec(duration_s=4.0, rate_rps=30.0, seed=5,
+                          diurnal=((0.0, 0.25), (0.5, 0.25), (0.51, 1.0),
+                                   (1.0, 1.0))))
+    early = sum(r.t_s < 2.0 for r in ramp.requests)
+    late = sum(r.t_s >= 2.0 for r in ramp.requests)
+    assert late > early * 2
+
+
+def test_rate_at_interpolates():
+    s = _spec(duration_s=10.0, rate_rps=10.0,
+              diurnal=((0.0, 1.0), (1.0, 3.0)))
+    assert s.rate_at(0.0) == pytest.approx(10.0)
+    assert s.rate_at(5.0) == pytest.approx(20.0)
+    assert s.rate_at(10.0) == pytest.approx(30.0)
+    assert s.rate_max == pytest.approx(30.0)
+
+
+def test_shared_system_prefix_is_stable():
+    tr = generate(_spec())
+    chat = [r for r in tr.requests if r.tenant == "chat"]
+    assert len(chat) > 2
+    prefix = chat[0].prompt[:16]
+    assert all(r.prompt[:16] == prefix for r in chat)
+    # and stable across regeneration (pure function of seed + tenant)
+    tr2 = generate(_spec())
+    chat2 = [r for r in tr2.requests if r.tenant == "chat"]
+    assert chat2[0].prompt[:16] == prefix
+
+
+def test_tenant_mix_respects_weights():
+    tr = generate(_spec(duration_s=5.0, rate_rps=40.0))
+    chat = sum(r.tenant == "chat" for r in tr.requests)
+    batch = sum(r.tenant == "batch" for r in tr.requests)
+    assert chat > batch          # 3:1 weights
+
+
+# -- serialization --------------------------------------------------------
+
+
+def test_trace_json_round_trip(tmp_path):
+    tr = generate(_spec())
+    rt = Trace.from_json(tr.to_json())
+    assert rt.to_json() == tr.to_json()
+    assert rt.requests == tr.requests
+    assert rt.meta == tr.meta
+    p = tmp_path / "t.trace.json"
+    tr.save(p)
+    assert Trace.load(p).to_json() == tr.to_json()
+
+
+def test_trace_version_check():
+    tr = generate(_spec())
+    bad = tr.to_json().replace('"version": 1', '"version": 99')
+    with pytest.raises(ValueError, match="version"):
+        Trace.from_json(bad)
+
+
+def test_trace_derived_views():
+    tr = generate(_spec())
+    assert tr.duration_s == 2.0
+    assert tr.offered_rps == pytest.approx(len(tr.requests) / 2.0)
+    assert tr.tokens_in() == sum(len(r.prompt) for r in tr.requests)
+    assert tr.tokens_out_budget() == sum(r.max_new for r in tr.requests)
+
+
+# -- replay ---------------------------------------------------------------
+
+
+def test_replay_fires_in_arrival_order_with_fake_clock():
+    tr = generate(_spec())
+    t = [0.0]
+    slept = []
+
+    def clock():
+        return t[0]
+
+    def sleep(d):
+        slept.append(d)
+        t[0] += d
+
+    fired = replay(tr, lambda r: (clock(), r.t_s), clock=clock, sleep=sleep)
+    assert [due for _, due in fired] == sorted(r.t_s for r in tr.requests)
+    # open loop: each request fires exactly at its due time
+    assert all(at == pytest.approx(due) for at, due in fired)
+    assert all(d > 0 for d in slept)
+
+
+def test_replay_late_arrivals_fire_immediately_and_stop_stops():
+    tr = generate(_spec())
+    n = len(tr.requests)
+
+    # clock jumps past the whole trace right after t0 is taken: every
+    # arrival is late, so the replayer must fire them all without sleeping
+    def late_clock():
+        late_clock.calls += 1
+        return 0.0 if late_clock.calls == 1 else 100.0
+
+    late_clock.calls = 0
+    fired = replay(tr, lambda r: r.t_s, clock=late_clock,
+                   sleep=lambda d: pytest.fail("slept on a late arrival"))
+    assert len(fired) == n
+    count = [0]
+
+    def submit(r):
+        count[0] += 1
+        return r
+
+    replay(tr, submit, clock=lambda: 0.0, sleep=lambda d: None,
+           stop=lambda: count[0] >= 3)
+    assert count[0] == 3

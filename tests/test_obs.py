@@ -161,6 +161,13 @@ def test_registry_flat_row_shape():
     row = reg.flat(["ttft_s"], fields=("p50", "p99", "max"))
     assert set(row) == {"ttft_p50_s", "ttft_p99_s", "ttft_max_s"}
     assert row["ttft_max_s"] == pytest.approx(0.040)
+    # default fields: full summary, with count/mean columns -- count is a
+    # sample count so it drops the unit suffix, mean keeps it
+    full = reg.flat(["ttft_s"])
+    assert set(full) == {"ttft_count", "ttft_mean_s", "ttft_p50_s",
+                         "ttft_p99_s", "ttft_p999_s", "ttft_max_s"}
+    assert full["ttft_count"] == 3
+    assert full["ttft_mean_s"] == pytest.approx((0.010 + 0.020 + 0.040) / 3)
     # the snapshot field set is a stable contract for results-row readers
     assert summary_keys == ("count", "mean", "p50", "p99", "p999", "max")
 

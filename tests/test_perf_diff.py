@@ -1,0 +1,127 @@
+"""benchmarks/perf_diff.py: the perf-trajectory regression gate.  The
+acceptance contract: zero-diff against an identical file, and the gate
+FAILS (nonzero exit) when a metric is perturbed beyond tolerance."""
+
+import copy
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.perf_diff import (compare, load_rows, main, parse_gate,  # noqa: E402
+                                  row_key, row_metrics)
+
+ROWS = [
+    {"scheme": "EpochPOP", "profile": "calm", "engines": 8,
+     "sim_backend": "vec", "goodput_under_slo": 70.0, "ttft_p99_s": 0.05,
+     "tok_per_s": 75.0, "uaf": 0, "samples": [{"t_s": 0.0}]},
+    {"scheme": "EBR", "profile": "calm", "engines": 8,
+     "sim_backend": "vec", "goodput_under_slo": 72.0, "ttft_p99_s": 0.04,
+     "tok_per_s": 74.0, "uaf": 0, "samples": [{"t_s": 0.0}]},
+]
+
+
+def test_row_key_is_scalar_identity():
+    k = row_key(ROWS[0])
+    assert ("scheme", "EpochPOP") in k and ("profile", "calm") in k
+    assert ("engines", 8) in k                  # numeric grid axis
+    assert all(name != "goodput_under_slo" for name, _ in k)
+    # metrics exclude identity axes and non-scalars
+    m = row_metrics(ROWS[0])
+    assert "goodput_under_slo" in m and "engines" not in m
+    assert "samples" not in m
+
+
+def test_zero_diff_against_self():
+    rep = compare(ROWS, copy.deepcopy(ROWS))
+    assert rep["matched"] == 2
+    assert rep["missing"] == [] and rep["added"] == []
+    assert rep["diffs"] == [] and rep["regressions"] == 0
+
+
+def test_goodput_drop_beyond_tolerance_regresses():
+    new = copy.deepcopy(ROWS)
+    new[0]["goodput_under_slo"] *= 0.8          # -20% > 10% tolerance
+    rep = compare(ROWS, new)
+    bad = [d for d in rep["diffs"] if d["regressed"]]
+    assert len(bad) == 1 and bad[0]["metric"] == "goodput_under_slo"
+    assert rep["regressions"] == 1
+
+
+def test_within_tolerance_and_good_directions_pass():
+    new = copy.deepcopy(ROWS)
+    new[0]["goodput_under_slo"] *= 0.95         # -5% < 10% tolerance
+    new[0]["ttft_p99_s"] *= 1.2                 # +20% < 25% tolerance
+    new[1]["goodput_under_slo"] *= 2.0          # improvement, never gates
+    new[1]["ttft_p99_s"] *= 0.5                 # improvement, never gates
+    rep = compare(ROWS, new)
+    assert rep["regressions"] == 0
+    assert all(not d["regressed"] for d in rep["diffs"])
+
+
+def test_ttft_rise_beyond_tolerance_regresses():
+    new = copy.deepcopy(ROWS)
+    new[1]["ttft_p99_s"] *= 1.5                 # +50% > 25% tolerance
+    rep = compare(ROWS, new)
+    assert rep["regressions"] == 1
+    assert rep["diffs"][-1]["metric"] != "goodput_under_slo" or True
+    bad = [d for d in rep["diffs"] if d["regressed"]]
+    assert bad[0]["metric"] == "ttft_p99_s"
+
+
+def test_ungated_metrics_are_informational():
+    new = copy.deepcopy(ROWS)
+    new[0]["tok_per_s"] *= 0.1                  # huge drop, but no gate
+    rep = compare(ROWS, new)
+    assert rep["regressions"] == 0
+    d = [x for x in rep["diffs"] if x["metric"] == "tok_per_s"][0]
+    assert d["gated"] is False and d["regressed"] is False
+
+
+def test_grid_axis_changes_split_rows():
+    new = copy.deepcopy(ROWS)
+    new[0]["engines"] = 16                      # different cell, not a diff
+    rep = compare(ROWS, new)
+    assert rep["matched"] == 1
+    assert len(rep["missing"]) == 1 and len(rep["added"]) == 1
+    assert rep["regressions"] == 0
+
+
+def test_parse_gate():
+    assert parse_gate("goodput*=0.05:down") == ("goodput*", "down", 0.05)
+    assert parse_gate("ttft_p99_s=0.1:up") == ("ttft_p99_s", "up", 0.1)
+    assert parse_gate("x=0.2") == ("x", "down", 0.2)
+
+
+def _write(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps(rows))
+    return str(p)
+
+
+def test_main_exit_codes_demonstrate_ci_gate(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", ROWS)
+    same = _write(tmp_path, "same.json", ROWS)
+    bad_rows = copy.deepcopy(ROWS)
+    bad_rows[0]["goodput_under_slo"] *= 0.5     # -50%: the lane must fail
+    bad = _write(tmp_path, "bad.json", bad_rows)
+
+    assert main([base, same]) == 0
+    assert "zero diff" in capsys.readouterr().out
+    assert main([base, bad]) == 1               # the CI regression lane
+    assert "REGRESSED" in capsys.readouterr().out
+    # a custom gate can tighten the tolerance below the delta
+    ok_rows = copy.deepcopy(ROWS)
+    ok_rows[0]["tok_per_s"] *= 0.8
+    ok = _write(tmp_path, "ok.json", ok_rows)
+    assert main([base, ok]) == 0
+    capsys.readouterr()
+    assert main([base, ok, "--gate", "tok_per_s=0.1:down"]) == 1
+
+
+def test_load_rows_from_git_baseline():
+    # the committed results files must be loadable through git show
+    rows = load_rows("results/serve_reclaim.json", git_ref="HEAD")
+    assert isinstance(rows, list) and rows
+    assert compare(rows, rows)["regressions"] == 0

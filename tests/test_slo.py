@@ -1,0 +1,95 @@
+"""obs/slo.py: SLO attainment / goodput math (hand-checked windows) and
+the time-series sampler."""
+
+import pytest
+
+from repro.obs import SLOSpec, SLOTracker, TimeSeriesSampler
+
+
+SPEC = SLOSpec(ttft_s=0.1, tok_latency_s=0.02)
+
+
+def test_spec_meets_both_budgets():
+    assert SPEC.meets(0.1, 0.02)            # inclusive budgets
+    assert not SPEC.meets(0.11, 0.01)       # ttft miss
+    assert not SPEC.meets(0.01, 0.03)       # per-token miss
+    assert SPEC.to_dict() == {"name": "default", "ttft_s": 0.1,
+                              "tok_latency_s": 0.02}
+
+
+def test_hand_checked_windows_and_goodput():
+    t = SLOTracker(SPEC, window_s=1.0)
+    # window 0: one meeting request, 10 tokens
+    assert t.observe(t_finish_s=0.5, tokens=10, ttft_s=0.05,
+                     tok_latency_s=0.01, tenant="a") is True
+    # window 1: a TTFT miss (10 tokens) and a per-token miss (5 tokens)
+    assert t.observe(t_finish_s=1.5, tokens=10, ttft_s=0.25,
+                     tok_latency_s=0.01, tenant="a") is False
+    assert t.observe(t_finish_s=1.7, tokens=5, ttft_s=0.05,
+                     tok_latency_s=0.05, tenant="b") is False
+
+    assert t.requests == 3
+    assert t.attainment() == pytest.approx(1 / 3)
+    assert t.good_tokens == 10
+    # goodput counts ONLY SLO-meeting tokens: 10 tokens over 2 s
+    assert t.goodput(2.0) == pytest.approx(5.0)
+
+    w = t.windows()
+    assert [x["t_s"] for x in w] == [0.0, 1.0]
+    assert [x["attainment"] for x in w] == [1.0, 0.0]
+    assert [x["good_tokens"] for x in w] == [10, 0]
+    assert [x["tokens"] for x in w] == [10, 15]
+
+    per = t.per_tenant(2.0)
+    assert per["a"]["attainment"] == pytest.approx(0.5)
+    assert per["a"]["goodput"] == pytest.approx(5.0)
+    assert per["b"]["attainment"] == 0.0
+    assert per["b"]["goodput"] == 0.0
+
+    s = t.summary(2.0)
+    assert s["goodput_under_slo"] == pytest.approx(5.0)
+    assert s["slo_requests"] == 3 and s["slo_met"] == 1
+    assert s["tokens_out"] == 25
+    assert s["slo"]["ttft_s"] == 0.1
+    assert len(s["slo_windows"]) == 2
+
+
+def test_single_token_requests_trivially_meet_token_budget():
+    t = SLOTracker(SPEC)
+    assert t.observe(t_finish_s=0.1, tokens=1, ttft_s=0.05,
+                     tok_latency_s=0.0)
+    assert t.attainment() == 1.0
+
+
+def test_empty_tracker_is_vacuously_attained():
+    t = SLOTracker(SPEC)
+    assert t.attainment() == 1.0
+    assert t.goodput(1.0) == 0.0
+    assert t.windows() == []
+    assert t.summary(1.0)["slo_requests"] == 0
+
+
+def test_sampler_probes_and_peak():
+    clock = [0.0]
+    s = TimeSeriesSampler({"x": lambda: clock[0] * 10, "bad": lambda: 1 / 0},
+                          interval_s=0.01, clock=lambda: clock[0])
+    s.sample_once()
+    clock[0] = 1.0
+    row = s.sample_once()
+    assert row["t_s"] == pytest.approx(1.0)
+    assert row["x"] == pytest.approx(10.0)
+    assert row["bad"] is None               # failing probe never kills a row
+    assert s.peak("x") == pytest.approx(10.0)
+    assert s.peak("bad") == 0.0
+
+
+def test_sampler_background_thread_collects_and_stops():
+    s = TimeSeriesSampler({"c": lambda: 1.0}, interval_s=0.005).start()
+    import time
+    time.sleep(0.05)
+    samples = s.stop()
+    assert len(samples) >= 2                # polled + the final stop sample
+    assert all(r["c"] == 1.0 for r in samples)
+    n = len(s.samples)
+    time.sleep(0.02)
+    assert len(s.samples) == n              # genuinely stopped
