@@ -24,6 +24,14 @@ way a fleet operator would:
       that reader's publish (``max_ping_stall_s`` rises to ~the stall
       length on the native pool policy); an EBR-style pass pins the epoch
       and garbage accumulates instead.
+    - ``hot-engine``    -- calm arrivals + STATIC placement (rid-hash keeps
+      routing a fixed share of traffic to worker 0) + the same worker-0
+      desched fault: one engine of the fleet is both slow and still being
+      fed, so its queue builds while its peers idle.  Run twice per
+      scheme, migration monitor off vs on -- the on cell must recover the
+      p99 TTFT the off cell loses (every migration re-homes the request's
+      KV blocks across engine ids via ``BlockPool.adopt``, racing
+      whatever reclamation passes the scheme is running).
 * **SLO goodput, not throughput** -- each finished request is scored
   against TTFT + per-token budgets (obs/slo.py); rows report
   ``goodput_under_slo`` (SLO-meeting tokens/s: the ROADMAP's
@@ -68,7 +76,15 @@ from repro.serve.loadgen import TenantSpec, Trace, WorkloadSpec, generate, \
 
 DEFAULT_SCHEMES = ("EpochPOP-pool", "EpochPOP", "EBR", "HazardPtrPOP")
 QUICK_SCHEMES = ("EpochPOP", "EBR")
-PROFILES = ("calm", "bursty", "desched-stall")
+PROFILES = ("calm", "bursty", "desched-stall", "hot-engine")
+
+#: profiles that run a migration-on/off A/B per scheme: hot-engine is the
+#: cell migration must rescue, calm is the no-harm control
+MIGRATE_AB = ("hot-engine", "calm")
+
+#: the hot-engine acceptance bar: with the monitor on, p99 TTFT must come
+#: in at or under this fraction of the migration-off cell
+HOT_ENGINE_TTFT_RATIO = 0.7
 
 #: the per-request budgets a token must meet to count toward goodput --
 #: calibrated to the tiny fleet config on a single-core CI box: calm cells
@@ -80,6 +96,14 @@ SLO = SLOSpec(ttft_s=0.30, tok_latency_s=0.05, name="fleet-default")
 #: that one stall blows a victim request's per-token budget, so the cell
 #: shows up as lost goodput, not just a latency blip
 STALL_EVERY, STALL_S = 3, 0.25
+
+#: the hot-engine profile stalls worker 0 on EVERY step: combined with
+#: static placement its queue genuinely backs up (slots turn over at
+#: stall speed while the rid-hash keeps feeding it), which is the tail
+#: the migration monitor must rescue -- the milder every-3rd-step fault
+#: hurts requests already RUNNING on the victim, which no queued-request
+#: migration can help
+HOT_STALL_EVERY, HOT_STALL_S = 1, 0.25
 
 #: the multi-tenant mix every profile shares: a chatty tenant with a
 #: page-aligned shared system prompt + long-tailed lengths, a fixed batch
@@ -103,7 +127,7 @@ def profile_spec(profile: str, *, duration_s: float, rate_rps: float,
                  seed: int) -> WorkloadSpec:
     """The WorkloadSpec for one traffic profile (the desched-stall profile
     reuses calm arrivals -- its fault lives in the engine, not the trace)."""
-    if profile in ("calm", "desched-stall"):
+    if profile in ("calm", "desched-stall", "hot-engine"):
         return WorkloadSpec(duration_s=duration_s, seed=seed,
                             tenants=TENANTS, process="poisson",
                             rate_rps=rate_rps, vocab=64)
@@ -130,19 +154,29 @@ def _tiny_cfg_params():
 
 def run_cell(scheme: str, profile: str, trace: Trace, *, engines: int = 8,
              sim_backend: str = "vec", slo: SLOSpec = SLO,
-             sample_interval_s: float = 0.1, cfg=None, params=None,
-             tracer=None) -> dict:
-    """Replay ``trace`` against one (scheme, profile) fleet cell and score
-    it: SLO goodput + latency percentiles + peak gauges + time series."""
+             sample_interval_s: float = 0.1, migrate: bool = False,
+             cfg=None, params=None, tracer=None) -> dict:
+    """Replay ``trace`` against one (scheme, profile, migrate) fleet cell
+    and score it: SLO goodput + latency percentiles + peak gauges + time
+    series."""
     from repro.serve.engine import ServeEngine
 
     if cfg is None or params is None:
         cfg, params = _tiny_cfg_params()
-    stalled = profile == "desched-stall"
+    # both fault profiles stall worker 0 mid-step; hot-engine additionally
+    # pins placement (static rid-hash) so the stalled engine keeps being
+    # fed its fixed share -- the skew the migration monitor must undo
+    stalled = profile in ("desched-stall", "hot-engine")
+    stall_every, stall_s = (
+        (HOT_STALL_EVERY, HOT_STALL_S) if profile == "hot-engine"
+        else (STALL_EVERY, STALL_S) if stalled else (0, 0.0))
     kw = dict(n_engines=engines, max_batch=4, page_size=16, max_seq=64,
               prefix_cache=True, kv_store="dense",
-              stall_every=STALL_EVERY if stalled else 0,
-              stall_s=STALL_S if stalled else 0.0, trace=tracer)
+              stall_every=stall_every, stall_s=stall_s,
+              place_policy="static" if profile == "hot-engine"
+              else "least-loaded",
+              migrate=migrate, migrate_threshold=2,
+              migrate_interval_s=0.02, trace=tracer)
     num_pages = engines * 24
     if is_simulated(scheme):
         eng = ServeEngine(cfg, params, num_pages=num_pages, smr=scheme,
@@ -200,6 +234,7 @@ def run_cell(scheme: str, profile: str, trace: Trace, *, engines: int = 8,
         row = {
             "scheme": scheme, "profile": profile, "engines": engines,
             "sim_backend": sim_backend, "kv_store": "dense",
+            "place_policy": kw["place_policy"], "migrate": int(migrate),
             "trace_seed": int(trace.meta["seed"]),
             "trace_duration_s": trace.duration_s,
             "offered_rps": trace.offered_rps,
@@ -216,8 +251,12 @@ def run_cell(scheme: str, profile: str, trace: Trace, *, engines: int = 8,
             "peak_kv_bytes": sampler.peak("resident_kv_bytes"),
             "peak_queue_depth": sampler.peak("queue_depth"),
             "injected_stalls": eng.injected_stalls,
-            "stall_every": STALL_EVERY if stalled else 0,
-            "stall_s": STALL_S if stalled else 0.0,
+            "stall_every": stall_every,
+            "stall_s": stall_s,
+            "migrations": eng.scheduler.migrations,
+            "preemptions": eng.scheduler.preemptions,
+            "queue_reorders": eng.scheduler.queue_reorders,
+            "adopts": st.adopts, "stale_handoffs": st.stale_handoffs,
             "uaf": int(isinstance(eng.error, UseAfterFree)),
             "errors": [repr(eng.error)] if eng.error else [],
             "samples": samples,
@@ -231,9 +270,12 @@ def run_fleet(schemes=DEFAULT_SCHEMES, profiles=PROFILES, *,
               engines: int = 8, duration_s: float = 3.0,
               rate_rps: float = 16.0, seed: int = 11,
               sim_backend: str = "vec", tracer=None,
-              save_workloads=None) -> list:
+              migrate_ab=MIGRATE_AB, save_workloads=None) -> list:
     """The grid: one trace per profile (same seed -> every scheme replays
-    identical traffic), every scheme through every profile."""
+    identical traffic), every scheme through every profile; profiles in
+    ``migrate_ab`` additionally run a migration-on twin (hot-engine: the
+    rescue cell the :data:`HOT_ENGINE_TTFT_RATIO` gate scores; calm: the
+    no-harm control)."""
     cfg, params = _tiny_cfg_params()
     traces = {p: generate(profile_spec(p, duration_s=duration_s,
                                        rate_rps=rate_rps, seed=seed))
@@ -244,23 +286,40 @@ def run_fleet(schemes=DEFAULT_SCHEMES, profiles=PROFILES, *,
         for p, tr in traces.items():
             tr.save(d / f"fleet_{p}.trace.json")
     rows = []
+    hot_pairs = {}          # scheme -> {migrate: row} for the rescue gate
     for scheme in schemes:
         for profile in profiles:
-            r = run_cell(scheme, profile, traces[profile], engines=engines,
-                         sim_backend=sim_backend, cfg=cfg, params=params,
-                         tracer=tracer)
-            rows.append(r)
-            print(f"# {scheme:14s} {profile:13s} e={engines} "
-                  f"goodput={r['goodput_under_slo']:7.1f} tok/s "
-                  f"attain={r['slo_attainment']:.2f} "
-                  f"ttft_p99={r['ttft_p99_s'] * 1e3:6.1f} ms "
-                  f"max_ping_stall={r['max_ping_stall_s'] * 1e3:6.1f} ms "
-                  f"peak_kv={r['peak_kv_bytes'] / 1e6:.1f} MB "
-                  f"uaf={r['uaf']}")
-            assert r["uaf"] == 0, \
-                f"use-after-free under {scheme}/{profile}: {r['errors']}"
-            assert not r["errors"], \
-                f"engine error under {scheme}/{profile}: {r['errors']}"
+            variants = ((False, True) if profile in migrate_ab
+                        else (False,))
+            for migrate in variants:
+                r = run_cell(scheme, profile, traces[profile],
+                             engines=engines, sim_backend=sim_backend,
+                             migrate=migrate, cfg=cfg, params=params,
+                             tracer=tracer)
+                rows.append(r)
+                if profile == "hot-engine":
+                    hot_pairs.setdefault(scheme, {})[int(migrate)] = r
+                print(f"# {scheme:14s} {profile:13s} e={engines} "
+                      f"m={int(migrate)} "
+                      f"goodput={r['goodput_under_slo']:7.1f} tok/s "
+                      f"attain={r['slo_attainment']:.2f} "
+                      f"ttft_p99={r['ttft_p99_s'] * 1e3:6.1f} ms "
+                      f"max_ping_stall={r['max_ping_stall_s'] * 1e3:6.1f} ms "
+                      f"migrations={r['migrations']} "
+                      f"uaf={r['uaf']}")
+                assert r["uaf"] == 0, \
+                    f"use-after-free under {scheme}/{profile}: {r['errors']}"
+                assert not r["errors"], \
+                    f"engine error under {scheme}/{profile}: {r['errors']}"
+    for scheme, pair in hot_pairs.items():
+        if 0 in pair and 1 in pair:
+            off, on = pair[0]["ttft_p99_s"], pair[1]["ttft_p99_s"]
+            assert on <= HOT_ENGINE_TTFT_RATIO * off, (
+                f"{scheme}: migration failed to rescue the hot engine "
+                f"(ttft_p99 on={on * 1e3:.1f}ms vs off={off * 1e3:.1f}ms, "
+                f"bar {HOT_ENGINE_TTFT_RATIO:.0%})")
+            assert pair[1]["migrations"] > 0, \
+                f"{scheme}: hot-engine cell ran with zero migrations"
     return rows
 
 
@@ -268,6 +327,8 @@ def to_csv(rows) -> list:
     out = []
     for r in rows:
         tag = f"fleet_load:{r['scheme']}:{r['profile']}:e{r['engines']}"
+        if r.get("migrate"):
+            tag += ":m1"
         if r.get("sim_backend") not in (None, "gen"):
             tag += "@" + r["sim_backend"]
         out.append(
@@ -277,6 +338,7 @@ def to_csv(rows) -> list:
             f"ttft_p99_ms={r['ttft_p99_s'] * 1e3:.1f};"
             f"max_ping_stall_ms={r['max_ping_stall_s'] * 1e3:.1f};"
             f"peak_kv_bytes={int(r['peak_kv_bytes'])};"
+            f"migrations={r.get('migrations', 0)};"
             f"uaf={r['uaf']}")
     return out
 
@@ -284,7 +346,8 @@ def to_csv(rows) -> list:
 def main(argv=None) -> list:
     ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
     ap.add_argument("--quick", action="store_true",
-                    help="2 schemes x {calm, desched-stall}, shorter trace")
+                    help="2 schemes x {calm, desched-stall, hot-engine}, "
+                         "shorter trace, migration A/B on hot-engine only")
     ap.add_argument("--engines", type=int, default=8)
     ap.add_argument("--duration", type=float, default=None,
                     help="trace duration in seconds (default 3.0, quick 1.5)")
@@ -302,14 +365,17 @@ def main(argv=None) -> list:
 
     schemes = tuple(args.schemes) if args.schemes else (
         QUICK_SCHEMES if args.quick else DEFAULT_SCHEMES)
-    profiles = ("calm", "desched-stall") if args.quick else PROFILES
+    profiles = (("calm", "desched-stall", "hot-engine") if args.quick
+                else PROFILES)
+    migrate_ab = ("hot-engine",) if args.quick else MIGRATE_AB
     duration = args.duration if args.duration is not None else (
         1.5 if args.quick else 3.0)
     tracer = Tracer() if args.trace else None
     rows = run_fleet(schemes, profiles, engines=args.engines,
                      duration_s=duration, rate_rps=args.rate,
                      seed=args.seed, sim_backend=args.sim_backend,
-                     tracer=tracer, save_workloads=args.save_workloads)
+                     tracer=tracer, migrate_ab=migrate_ab,
+                     save_workloads=args.save_workloads)
     for line in to_csv(rows):
         print(line)
     if args.out:

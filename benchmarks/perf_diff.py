@@ -48,7 +48,7 @@ from typing import Dict, List, Optional, Tuple
 #: identity key so e.g. e=8 and e=16 cells never diff against each other
 KEY_NUMERIC_FIELDS = ("engines", "threads", "nthreads", "param", "seed",
                       "trace_seed", "prefill_chunk", "prefill_workers",
-                      "stall_every", "window")
+                      "stall_every", "window", "migrate")
 
 #: (glob pattern, direction, relative tolerance); first match wins.
 #: direction "down" = lower-is-worse (a drop regresses),

@@ -15,6 +15,10 @@ feature).
         --prefill-workers 2 --prefill-chunk 16   # async chunked prefill stage
     PYTHONPATH=src python examples/serve_paged.py --engines 2 \
         --trace /tmp/serve.json --metrics        # Perfetto trace + histograms
+    PYTHONPATH=src python examples/serve_paged.py --prefill-workers 2 \
+        --sched-policy sjf --preempt-prefill     # SJF + chunk preemption
+    PYTHONPATH=src python examples/serve_paged.py --engines 4 \
+        --place-policy static --migrate          # migration rescues skew
 
 ``--kv-store paged`` stores K/V physically in the POP-managed block pool
 (runtime/kv_store.py) and decodes through the Pallas paged-attention kernel
@@ -79,6 +83,30 @@ def main():
                     help="prompt tokens per prefill forward; a pool "
                          "safepoint between chunks bounds the ping-delivery "
                          "window during misses")
+    ap.add_argument("--sched-policy", default="fifo",
+                    choices=("fifo", "sjf", "deadline"),
+                    help="prefill-queue ordering: 'fifo' (arrival order), "
+                         "'sjf' (shortest remaining prompt first), or "
+                         "'deadline' (earliest deadline first, best-effort "
+                         "last)")
+    ap.add_argument("--preempt-prefill", action="store_true",
+                    help="let long prefills yield to shorter queued work at "
+                         "chunk boundaries (the same safepoint cadence that "
+                         "bounds the ping window); requires "
+                         "--prefill-workers >= 1")
+    ap.add_argument("--place-policy", default="least-loaded",
+                    choices=("least-loaded", "static"),
+                    help="decode placement: 'least-loaded' (default) or "
+                         "'static' rid-hash (skew-prone; pair with "
+                         "--migrate to watch the monitor rescue it)")
+    ap.add_argument("--migrate", action="store_true",
+                    help="start the migration monitor: queued requests move "
+                         "off the hottest engine onto the coolest, their KV "
+                         "blocks re-homed across engine ids via "
+                         "BlockPool.adopt (atomic vs publish-on-ping passes)")
+    ap.add_argument("--migrate-threshold", type=int, default=4, metavar="N",
+                    help="minimum hot-cool load spread (queued+running) "
+                         "before the monitor moves requests")
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="write a Chrome-trace/Perfetto JSON of the run: "
@@ -113,6 +141,11 @@ def main():
                       kv_store=args.kv_store, kv_storage=args.kv_storage,
                       prefill_workers=args.prefill_workers,
                       prefill_chunk=args.prefill_chunk,
+                      sched_policy=args.sched_policy,
+                      preempt_prefill=args.preempt_prefill,
+                      place_policy=args.place_policy,
+                      migrate=args.migrate,
+                      migrate_threshold=args.migrate_threshold,
                       trace=tracer)
     eng.start()
     t0 = time.time()
@@ -139,6 +172,15 @@ def main():
               f"prefilled={sum(pw.requests for pw in eng.prefill_workers)} "
               f"tokens={eng.prefill_tokens} "
               f"max_ping_stall={s.max_ping_stall_s*1e3:.1f}ms")
+    sched = eng.scheduler
+    if (args.sched_policy != "fifo" or args.preempt_prefill or args.migrate
+            or args.place_policy != "least-loaded"):
+        print(f"scheduler: policy={args.sched_policy} "
+              f"place={args.place_policy} "
+              f"reorders={sched.queue_reorders} "
+              f"preemptions={sched.preemptions} "
+              f"migrations={sched.migrations} "
+              f"adopts={s.adopts} stale_handoffs={s.stale_handoffs}")
     if args.prefix_cache:
         actors = eng.workers + eng.prefill_workers
         print(f"prefix cache: hits={s.prefix_hits} misses={s.prefix_misses} "

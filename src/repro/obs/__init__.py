@@ -20,11 +20,12 @@ reservations add none until a reclaimer pings.
   time-series rows.
 """
 
-from repro.obs.metrics import Histogram, MetricsRegistry, summary_keys
+from repro.obs.metrics import Counter, Histogram, MetricsRegistry, \
+    summary_keys
 from repro.obs.slo import SLOSpec, SLOTracker, TimeSeriesSampler, \
     engine_probes
 from repro.obs.trace import PID_SIM, PID_WALL, Tracer, validate_trace
 
-__all__ = ["Histogram", "MetricsRegistry", "PID_SIM", "PID_WALL",
+__all__ = ["Counter", "Histogram", "MetricsRegistry", "PID_SIM", "PID_WALL",
            "SLOSpec", "SLOTracker", "TimeSeriesSampler", "Tracer",
            "engine_probes", "summary_keys", "validate_trace"]

@@ -41,7 +41,7 @@ import math
 import threading
 from typing import Dict, List, Optional
 
-__all__ = ["Histogram", "MetricsRegistry", "summary_keys"]
+__all__ = ["Counter", "Histogram", "MetricsRegistry", "summary_keys"]
 
 MIN_EXP = -40          # 2^-40 s ~ 1 ps: nothing we time is faster
 MAX_EXP = 20           # 2^20 s ~ 12 days: nothing we time is slower
@@ -206,18 +206,61 @@ class Histogram:
         }
 
 
+class Counter:
+    """Monotonic named event counter (scheduler control-plane events:
+    ``queue_reorder``, ``preemption``, ``migration``).  These fire per
+    scheduling *decision*, not per token, so a plain int under a lock is
+    the right cost -- the histogram shard machinery exists for the hot
+    data path, not for events that happen a few times per second."""
+
+    __slots__ = ("name", "_lock", "_n")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self._lock = threading.Lock()
+        self._n = 0
+
+    def inc(self, n: int = 1) -> int:
+        with self._lock:
+            self._n += n
+            return self._n
+
+    @property
+    def value(self) -> int:
+        return self._n
+
+
 class MetricsRegistry:
-    """Named histograms, created on demand, snapshot as one dict.
+    """Named histograms + counters, created on demand, snapshot as one dict.
 
     One registry per serving engine (TTFT, token latency, queue wait) plus
     one per block pool (ping stall, reclaim-pass duration); ``snapshot``
     merges every shard first, so it is safe to call while workers are still
     recording -- they only ever lose the samples recorded after the merge.
+    Counters live alongside (``counter``/``counters``) but stay out of
+    ``snapshot``/``flat``: those emit the histogram summary-row contract
+    results-file readers rely on, and a counter has no percentiles.
     """
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._hists: Dict[str, Histogram] = {}
+        self._counters: Dict[str, Counter] = {}
+
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            with self._lock:
+                c = self._counters.get(name)
+                if c is None:
+                    c = Counter(name)
+                    self._counters[name] = c
+        return c
+
+    def counters(self) -> Dict[str, int]:
+        """Current value of every counter, as one plain dict."""
+        with self._lock:
+            return {name: c.value for name, c in sorted(self._counters.items())}
 
     def histogram(self, name: str) -> Histogram:
         h = self._hists.get(name)
@@ -237,9 +280,15 @@ class MetricsRegistry:
             return sorted(self._hists)
 
     def reset(self) -> None:
-        """Reset every histogram (see :meth:`Histogram.reset`)."""
+        """Reset every histogram (see :meth:`Histogram.reset`) and zero
+        every counter -- the warmup/timed-window boundary."""
         for name in self.names():
             self._hists[name].reset()
+        with self._lock:
+            counters = list(self._counters.values())
+        for c in counters:
+            with c._lock:
+                c._n = 0
 
     def snapshot(self) -> Dict[str, Dict[str, float]]:
         return {name: self._hists[name].snapshot() for name in self.names()}

@@ -50,10 +50,28 @@ class OutOfBlocks(RuntimeError):
     pass
 
 
+class StaleHandoff(RuntimeError):
+    """An :meth:`BlockPool.adopt` was refused because the source engine no
+    longer owns the blocks being handed off -- the source crashed (or
+    otherwise unwound) after the handoff was queued, so the blocks were
+    already recovered onto a survivor and may be retired, freed, or even
+    REALLOCATED to another request by now.  Completing the adopt would
+    resurrect them into the destination's live set and a later retire
+    would free them under their new owner: a use-after-free by protocol.
+    The pool raises without mutating any ledger; the caller must rebuild
+    the request's state from scratch (re-admit, re-prefill) instead of
+    adopting."""
+
+
 @dataclass
 class PoolStats:
     allocated: int = 0
     freed: int = 0
+    # ownership transfers (prefill->decode handoffs + scheduler migrations)
+    # and the stale handoffs the crash-consistency check refused
+    adopts: int = 0
+    adopted_blocks: int = 0
+    stale_handoffs: int = 0
     epoch_reclaims: int = 0
     pop_reclaims: int = 0
     pings: int = 0
@@ -238,20 +256,43 @@ class BlockPool:
         reference* each, so a shared block stays in ``src``'s live set when
         another of ``src``'s requests still uses it.
 
-        Safety: only blocks of an in-flight request are ever adopted, and
-        such blocks are never on the retired list (retire happens at
-        request finish / last shared reference drop), so no policy free
-        decision can race the move.  The ledger update still runs under the
-        pool lock -- and ``dst`` gains membership before ``src`` loses it --
-        so a concurrent publish-on-ping snapshot (which copies live sets
-        under the same lock) always sees the block in at least one set.
+        Safety against reclamation: only blocks of an in-flight request are
+        ever adopted, and such blocks are never on the retired list (retire
+        happens at request finish / last shared reference drop), so no
+        policy free decision can race the move.  The ledger update runs
+        under the pool lock -- and ``dst`` gains membership before ``src``
+        loses it -- so a concurrent publish-on-ping snapshot (which copies
+        live sets under the same lock) always sees the block in at least
+        one set.  A retire by the new owner that races an in-flight POP
+        pass lands at an epoch >= the pass's cut and is excluded from it
+        (see ``EpochPOPPolicy._reclaim_pop``), closing the
+        publish-before-adopt window on that side too.
+
+        Safety against crashes: the in-flight invariant breaks exactly when
+        ``src`` crashed after the handoff was queued --
+        :meth:`crash_engine` already recovered its blocks onto a survivor,
+        so they may be retired, freed, or reallocated.  The transfer
+        therefore VALIDATES, atomically under the same lock, that ``src``
+        still owns every private block and holds a request reference on
+        every shared one; any miss raises :class:`StaleHandoff` with no
+        ledger mutation, and the caller re-admits the request from scratch.
         """
         if src == dst or (not blocks and not shared):
             return
         with self._lock:
-            self._live_local[dst].update(blocks)
-            self._live_local[src].difference_update(blocks)
+            own = self._live_local[src]
             er_s = self._engine_shared[src]
+            stale = [b for b in blocks if b not in own]
+            stale += [b for b in shared if er_s.get(b, 0) < 1]
+            if stale:
+                self.stats.stale_handoffs += 1
+                raise StaleHandoff(
+                    f"adopt {src}->{dst}: engine {src} no longer owns "
+                    f"blocks {stale[:8]}{'...' if len(stale) > 8 else ''} "
+                    f"(source crashed after handoff?); the request must be "
+                    f"re-admitted, not adopted")
+            self._live_local[dst].update(blocks)
+            own.difference_update(blocks)
             er_d = self._engine_shared[dst]
             for b in shared:
                 self._live_local[dst].add(b)
@@ -262,6 +303,14 @@ class BlockPool:
                     self._live_local[src].discard(b)
                 else:
                     er_s[b] = n - 1
+            self.stats.adopts += 1
+            self.stats.adopted_blocks += len(blocks) + len(shared)
+        self.policy.on_adopt(src, dst, blocks, shared)
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.instant("adopt", cat="smr",
+                       args={"src": src, "dst": dst,
+                             "blocks": len(blocks) + len(shared)})
 
     def safepoint(self, engine: int) -> None:
         """Bounded-time ping delivery point: publish-on-ping."""

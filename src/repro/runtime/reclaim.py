@@ -97,6 +97,25 @@ class ReclaimPolicy:
     def on_allocate(self, engine: int, blocks: Sequence[int]) -> None:
         pass
 
+    def on_adopt(self, src: int, dst: int, blocks: Sequence[int],
+                 shared: Sequence[int] = ()) -> None:
+        """Ownership of ``blocks`` (plus one shared request reference per
+        block in ``shared``) moved ``src`` -> ``dst`` -- the prefill->decode
+        handoff or a scheduler migration.  Called AFTER the pool's ledger
+        update, outside the pool lock.
+
+        Base: no-op, and deliberately so for the shipped policies too.
+        Every policy reads ownership through the pool's live-set ledger,
+        which the pool updates atomically (dst gains before src loses)
+        under the same lock the publish snapshot copies under -- so there
+        is no per-policy shadow state to migrate.  The native POP pass is
+        additionally safe against the publish-before-adopt interleaving
+        because in-flight blocks are never on the retired list and a
+        post-adopt retire lands at an epoch >= the pass's cut.  The hook
+        exists so a future policy that DOES keep per-engine reservation
+        state (e.g. per-thread hazard slots pinned to block ids) has a
+        seam to move it through, and so tests can observe transfers."""
+
     def on_retire(self, engine: int, blocks: Sequence[int]) -> None:
         pass
 

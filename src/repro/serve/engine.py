@@ -65,6 +65,16 @@ class ServeEngine:
     ping-delivery window is chunk-bounded either way; the dedicated stage
     additionally keeps co-batched decodes flowing while long prompts
     prefill.
+
+    Scheduling knobs (see serve/scheduler.py and docs/SERVING.md):
+    ``sched_policy`` orders the shared prefill queue (``fifo`` | ``sjf`` |
+    ``deadline``); ``preempt_prefill`` lets long prefills yield to shorter
+    queued work at chunk boundaries (``preempt_margin`` tokens of
+    hysteresis); ``place_policy`` picks decode placement (``least-loaded``
+    | ``static``); ``migrate`` starts the load-balance monitor that moves
+    queued requests off hot engines (every ``migrate_interval_s`` seconds
+    when the load spread reaches ``migrate_threshold``), adopting their KV
+    blocks across engine ids via the pool.
     """
 
     def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 8,
@@ -81,7 +91,12 @@ class ServeEngine:
                  trace: Optional[Tracer] = None,
                  metrics: Optional[MetricsRegistry] = None,
                  stall_every: int = 0, stall_s: float = 0.0,
-                 stall_workers: Optional[Sequence[int]] = None):
+                 stall_workers: Optional[Sequence[int]] = None,
+                 sched_policy: str = "fifo",
+                 preempt_prefill: bool = False, preempt_margin: int = 0,
+                 place_policy: str = "least-loaded",
+                 migrate: bool = False, migrate_interval_s: float = 0.02,
+                 migrate_threshold: int = 4):
         self.cfg = cfg
         self.params = params
         # observability: an engine-level registry always exists (recording
@@ -184,12 +199,20 @@ class ServeEngine:
                                        evict_policy=evict_policy)
         self.scheduler = Scheduler(self.workers, self.reclaimer,
                                    prefill_workers=self.prefill_workers,
-                                   tracer=trace, metrics=self.metrics)
+                                   tracer=trace, metrics=self.metrics,
+                                   pool=pool, sched_policy=sched_policy,
+                                   preempt=preempt_prefill,
+                                   preempt_margin=preempt_margin,
+                                   place_policy=place_policy,
+                                   migrate=migrate,
+                                   migrate_interval_s=migrate_interval_s,
+                                   migrate_threshold=migrate_threshold)
 
     # -- client API (unchanged from the monolithic engine) --
 
-    def submit(self, prompt: Sequence[int], max_new: int = 16) -> Request:
-        return self.scheduler.submit(prompt, max_new)
+    def submit(self, prompt: Sequence[int], max_new: int = 16,
+               deadline_s: Optional[float] = None) -> Request:
+        return self.scheduler.submit(prompt, max_new, deadline_s=deadline_s)
 
     def start(self) -> None:
         self.scheduler.start()

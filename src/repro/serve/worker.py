@@ -71,7 +71,7 @@ import numpy as np
 
 from repro.models.model import init_cache
 from repro.obs import MetricsRegistry, Tracer
-from repro.runtime.block_pool import BlockPool, OutOfBlocks
+from repro.runtime.block_pool import BlockPool, OutOfBlocks, StaleHandoff
 from repro.runtime.kv_store import PagedKVStore
 
 
@@ -95,6 +95,12 @@ class Request:
     hit_len: int = 0
     owner: Optional[int] = None
     cache: Optional[dict] = None
+    # scheduling state: absolute monotonic deadline (None = best-effort,
+    # sorts last under the deadline policy) and how often the scheduler
+    # preempted/migrated this request (observability + test oracles)
+    deadline_s: Optional[float] = None
+    preemptions: int = 0
+    migrations: int = 0
     # observability timeline (time.monotonic seconds; 0.0 = not yet):
     # submit -> first pickup (queue wait) -> first token (TTFT) -> per-token
     # cadence, plus the async-span id linking this request's trace events
@@ -109,6 +115,45 @@ class Request:
     @property
     def all_blocks(self) -> List[int]:
         return self.shared_blocks + self.blocks
+
+    def reset_admission(self) -> None:
+        """Forget everything admission built (blocks, prefix hit, dense
+        cache, prefill progress) so the request can be re-admitted from
+        scratch.  The one caller is stale-handoff recovery: the pool
+        refused an adopt because the source engine crashed and its blocks
+        were already recovered, so this request's references to them are
+        dangling by definition -- dropping them leaks nothing."""
+        self.blocks, self.shared_blocks = [], []
+        self.owner, self.cache = None, None
+        self.prefilled = self.hit_len = 0
+        self.cache_hit = False
+
+
+def finalize_request(pool: Optional[BlockPool], r: Request,
+                     tracer: Optional[Tracer] = None) -> None:
+    """Fail/stop-path completion of a stranded request, independent of any
+    worker instance: give its blocks back to the pool under the owning
+    engine id (retire private, release shared), close its trace tree, and
+    release its waiter.  This is the shared seam every stranded-request
+    path funnels through -- worker error paths and ``Scheduler.stop``'s
+    queue drain -- so cleanup never depends on a particular worker (or any
+    prefill worker at all) still existing.  Best-effort: it runs on error
+    paths where the pool itself may be the thing that failed."""
+    try:
+        if pool is not None and r.owner is not None:
+            pool.retire(r.owner, r.blocks)
+            if r.shared_blocks:
+                pool.release_shared(r.owner, r.shared_blocks)
+            r.blocks, r.shared_blocks = [], []
+    except Exception:  # noqa: BLE001 -- teardown best effort
+        pass
+    if tracer is not None and tracer.enabled and r.aid is not None:
+        tracer.instant("retire", cat="request",
+                       args={"rid": r.rid, "tokens": len(r.out),
+                             "finalized": True})
+        tracer.async_end("request", r.aid, cat="request")
+        r.aid = None
+    r.done.set()
 
 
 class _PoolActor:
@@ -157,6 +202,12 @@ class _PoolActor:
         self.admitted_hit = 0
         self.admitted_miss = 0
         self._dense_cache_bytes: Optional[int] = None
+        # voluntary chunk-level preemption: when set (by the scheduler, on
+        # prefill workers ONLY -- an inline decode admission has no shared
+        # queue to yield back to), consulted at every chunk boundary; a
+        # True return re-queues the request as a resumable partial
+        self.preempt_check = None
+        self.preemptions = 0
         self.error: Optional[BaseException] = None
         self._thread: Optional[threading.Thread] = None
 
@@ -263,11 +314,21 @@ class _PoolActor:
 
     def _adopt(self, r: Request) -> None:
         """Take ownership of a handed-off request's blocks (prefill ->
-        decode, or a resumable partial prefill picked up by a peer)."""
-        if r.owner is not None and r.owner != self.engine_id:
+        decode, a resumable partial picked up by a peer, or a scheduler
+        migration).  If the source engine crashed after the handoff was
+        queued its blocks were already recovered onto a survivor, and the
+        pool refuses the transfer (:class:`StaleHandoff`): reset the
+        request to un-admitted so the caller re-admits it from scratch --
+        re-running a prefill is always safe, resurrecting recovered blocks
+        never is."""
+        if r.owner is None or r.owner == self.engine_id:
+            return
+        try:
             self.pool.adopt(r.owner, self.engine_id, r.blocks,
                             r.shared_blocks)
             r.owner = self.engine_id
+        except StaleHandoff:
+            r.reset_admission()
 
     # -- observability (publish-on-flush: thread-local buffers/shards) --
 
@@ -299,6 +360,22 @@ class _PoolActor:
         elif m is not None and r.t_last_tok:
             m.record("tok_latency_s", now - r.t_last_tok)
         r.t_last_tok = now
+
+    def _note_preempt(self, r: Request) -> None:
+        """Voluntary chunk-boundary preemption: the request stays resumable
+        (blocks owned, ``r.prefilled`` partial) and goes back to the shared
+        queue -- the scheduler's policy decided someone else should run
+        first.  Count it on the request, the actor, and the metrics
+        registry; leave a trace instant."""
+        r.preemptions += 1
+        self.preemptions += 1
+        if self.metrics is not None:
+            self.metrics.counter("preemption").inc()
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.instant("preempt", cat="sched",
+                       args={"rid": r.rid, "prefilled": r.prefilled,
+                             "remaining": len(r.prompt) - r.prefilled})
 
     def _finish_trace(self, r: Request, *, finalized: bool = False) -> None:
         """Close the request's async span tree (retire instant + request
@@ -376,6 +453,13 @@ class _PoolActor:
             self.pool.safepoint(self.engine_id)
             if self._stop.is_set() and r.prefilled < len(r.prompt):
                 return False
+            # voluntary preemption at the same boundary (prefill workers
+            # only); the loop body already ran once, so every pickup makes
+            # at least one chunk of progress -- no preemption livelock
+            if (r.prefilled < len(r.prompt) and self.preempt_check is not None
+                    and self.preempt_check(r)):
+                self._note_preempt(r)
+                return False
         return True
 
     def _prefill_dense(self, r: Request) -> bool:
@@ -388,6 +472,12 @@ class _PoolActor:
         for t in range(r.prefilled, len(r.prompt)):
             self.pool.safepoint(self.engine_id)
             if self._stop.is_set():
+                return False
+            # voluntary preemption (prefill workers only); the ``t > start``
+            # guard guarantees at least one token of progress per pickup
+            if (self.preempt_check is not None and t > start
+                    and self.preempt_check(r)):
+                self._note_preempt(r)
                 return False
             _, r.cache, _ = self._decode(self.params, r.cache,
                                          toks[:, t:t + 1])
@@ -403,20 +493,8 @@ class _PoolActor:
         return True
 
     def _finalize(self, r: Request) -> None:
-        """Fail/stop-path completion: give the request's blocks back to
-        the pool under the owning engine id (retire private, release
-        shared) and release its waiter.  Best-effort -- this runs on
-        error paths where the pool itself may be the thing that failed."""
-        try:
-            if r.owner is not None:
-                self.pool.retire(r.owner, r.blocks)
-                if r.shared_blocks:
-                    self.pool.release_shared(r.owner, r.shared_blocks)
-                r.blocks, r.shared_blocks = [], []
-        except Exception:  # noqa: BLE001 -- teardown best effort
-            pass
-        self._finish_trace(r, finalized=True)
-        r.done.set()
+        """Fail/stop-path completion (see :func:`finalize_request`)."""
+        finalize_request(self.pool, r, self.tracer)
 
     def _insert_prefix(self, r: Request, n_full: int, payload) -> None:
         """Publish the full page-aligned prompt prefix: blocks 0..n_full-1
@@ -530,14 +608,18 @@ class EngineWorker(_PoolActor):
                 self._finish_trace(r)
                 r.done.set()
                 continue
+            if r.owner is not None:
+                # handed-off request: adopt its blocks (may reset the
+                # request to un-admitted on a stale handoff -- source
+                # engine crashed, blocks already recovered)
+                self._adopt(r)
             if r.owner is None:
-                # inline admission: the no-prefill-worker path (and the
-                # fallback when the prefill stage has failed)
+                # inline admission: the no-prefill-worker path, the
+                # fallback when the prefill stage has failed, and
+                # stale-handoff re-admission
                 if not self._admit_blocks(r):
                     self.queue.put(r)   # out of blocks: retry later
                     return
-            else:
-                self._adopt(r)
             if not self._run_prefill(r):
                 # stopping mid-inline-prefill: no peer can resume a
                 # request on OUR private queue (unlike the shared prefill
@@ -688,11 +770,11 @@ class PrefillWorker(_PoolActor):
         pressure (request untouched) or a stop mid-prefill (request
         partially prefilled, resumable) -- in both cases the caller
         re-queues it."""
+        if r.owner is not None:
+            self._adopt(r)   # may reset to un-admitted on a stale handoff
         if r.owner is None:
             if not self._admit_blocks(r):
                 return False
-        else:
-            self._adopt(r)
         return self._run_prefill(r)
 
     def _loop(self) -> None:
@@ -715,6 +797,7 @@ class PrefillWorker(_PoolActor):
                     tr.async_begin("prefill", r.aid, cat="request",
                                    args={"resume_from": r.prefilled})
                 self.pool.start_step(self.engine_id)
+                before_pre = r.preemptions
                 try:
                     done = self.prefill_one(r)
                 finally:
@@ -725,10 +808,13 @@ class PrefillWorker(_PoolActor):
                     self.requests += 1
                     self._scheduler.place_ready(r)
                 else:
-                    # allocation pressure or stop: back on the shared queue
-                    # (resumable -- a peer adopts the blocks and continues)
+                    # allocation pressure, preemption, or stop: back on the
+                    # shared queue (resumable -- a peer adopts the blocks
+                    # and continues).  Read the preempted flag BEFORE the
+                    # re-put: afterwards a peer may already be mutating r.
+                    preempted = r.preemptions > before_pre
                     self.queue.put(r)
-                    if not self._stop.is_set():
+                    if not self._stop.is_set() and not preempted:
                         time.sleep(0.002)   # don't spin on an empty pool
                 r = None
         except BaseException as e:  # noqa: BLE001
